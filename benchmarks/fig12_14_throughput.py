@@ -1,0 +1,75 @@
+"""Figs. 12-14 — trace-driven decoding-throughput modeling.
+
+Validates the reimplemented first-order model against the paper's published
+anchor points, then reproduces the three experiments:
+  Fig. 12: GPT-OSS-120B-MXFP4, weights fit in HBM, KV spills.
+  Fig. 13: GPT-OSS-120B BF16, alpha=0.8, weights also spill.
+  Fig. 14: alpha sweep (unimodal; TRACE peak higher and at larger alpha).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.system_model import (
+    PAPER_ANCHORS_FIG12,
+    PAPER_ANCHORS_FIG13,
+    SystemSpec,
+    gpt_oss_120b,
+    sweep_alpha,
+    sweep_context,
+    throughput,
+)
+
+from .common import emit
+
+
+def run():
+    sys = SystemSpec()
+
+    # ---- Fig. 12 -------------------------------------------------------------
+    m = gpt_oss_120b("mxfp4")
+    ctxs = [65536, 131072, 196608, 262144]
+    tw = sweep_context(m, ctxs)
+    err = []
+    for design in ("plain", "trace"):
+        for ctx, want in PAPER_ANCHORS_FIG12[design].items():
+            got = tw[design][ctxs.index(ctx)]
+            err.append(abs(got - want) / want)
+            emit("fig12", f"{design}_{ctx // 1024}k_tok_s", got, "tok/s",
+                 f"paper {want}")
+    emit("fig12", "anchor_mean_rel_err", float(np.mean(err)) * 100, "%",
+         "calibration quality")
+    speedup_128k = tw["trace"][1] / tw["plain"][1]
+    emit("fig12", "trace_speedup_128k", speedup_128k, "x", "paper 4.24x")
+    # GComp ≈ Plain in the KV-bound regime (LZ4 useless on token-major KV)
+    emit("fig12", "gcomp_vs_plain_128k",
+         tw["gcomp"][1] / tw["plain"][1], "x", "paper ~1.0")
+
+    # ---- Fig. 13 -------------------------------------------------------------
+    mb = gpt_oss_120b("bf16")
+    for design in ("plain", "gcomp", "trace"):
+        for ctx, want in PAPER_ANCHORS_FIG13[design].items():
+            got = throughput(mb, ctx, design, alpha=0.8).tok_s
+            emit("fig13", f"{design}_{ctx // 1024}k_tok_s", got, "tok/s",
+                 f"paper {want}")
+
+    # ---- Fig. 14 -------------------------------------------------------------
+    alphas = list(np.linspace(0.1, 0.95, 18))
+    sw = sweep_alpha(mb, 131072, alphas)
+    for design in ("plain", "gcomp", "trace"):
+        arr = np.array(sw[design])
+        best = int(arr.argmax())
+        emit("fig14", f"{design}_peak_tok_s", float(arr.max()), "tok/s",
+             "paper plain 30.89 gcomp 33.98 trace 41.51")
+        emit("fig14", f"{design}_peak_alpha", alphas[best], "",
+             "paper plain/gcomp 0.592, trace 0.771")
+        # unimodality check (allow flat tails)
+        d = np.sign(np.diff(np.round(arr, 6)))
+        changes = int(np.sum(np.abs(np.diff(d[d != 0]))) // 2)
+        emit("fig14", f"{design}_unimodal", int(changes <= 1), "bool")
+    assert sw["trace"][np.argmax(sw["trace"])] > sw["gcomp"][np.argmax(sw["gcomp"])]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,154 @@
+"""§Roofline — three-term roofline per (arch × shape) from the dry-run.
+
+Reads the dry-run JSON (launch/dryrun.py --out) and derives, per cell on
+the single-pod mesh:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+(the compiled module is the post-SPMD per-device program, so
+cost_analysis() numbers are already per-chip).  Also reports
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) against HLO FLOPs, the
+dominant term, and one-line guidance — the §Perf loop iterates on the
+dominant term.
+
+Hardware constants (TPU v5e-class, per chip):
+    197 TFLOP/s bf16; 819 GB/s HBM; ICI 2 links/axis × 50 GB/s = 100 GB/s
+    effective per chip (bidirectional ring transfers; conservative since
+    v5e has 4 links usable across 2 mesh axes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 100e9
+
+DRYRUN_JSON = os.environ.get("DRYRUN_JSON", "dryrun_baseline.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D (train) / 2·N·D (one forward token batch, decode/prefill)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.seq_len * shape.global_batch
+        return 6.0 * n * d
+    if shape.is_decode:
+        return 2.0 * n * shape.global_batch
+    return 2.0 * n * shape.seq_len * shape.global_batch
+
+
+def analyse(rec: dict) -> dict:
+    """Three roofline terms per chip.
+
+    Two memory readings are reported:
+      * ``t_memory_hlo``  — cost_analysis 'bytes accessed' (trip-count
+        corrected).  On the CPU lowering this counts every HLO op's
+        operand/result traffic with almost no fusion, so it overstates
+        TPU HBM traffic by roughly the fusion factor.
+      * ``t_memory_min``  — mandatory device traffic from
+        memory_analysis: arguments read + outputs written + temp
+        working set, i.e. what a perfectly-fused program still moves.
+    The dominant-term decision and roofline fraction use
+    max(compute, memory_min, collective); memory_hlo is kept as the
+    fusion-waste signal (§Perf iterates it down where it dominates).
+    """
+    chips = rec["chips"]
+    flops = rec.get("hlo_flops_corrected", rec.get("hlo_flops", 0.0))
+    bytes_hlo = rec.get("hlo_bytes_corrected", rec.get("hlo_bytes", 0.0))
+    man_bytes = (
+        rec.get("argument_size_in_bytes", 0)
+        + rec.get("output_size_in_bytes", 0)
+        + rec.get("temp_size_in_bytes", 0)
+    )
+    coll_b = rec.get(
+        "collective_bytes_corrected",
+        rec.get("collectives", {}).get("total", 0.0),
+    )
+    comp = flops / PEAK_FLOPS
+    mem_hlo = bytes_hlo / HBM_BW
+    mem_min = man_bytes / HBM_BW
+    coll = coll_b / ICI_BW
+    terms = {"compute": comp, "memory": mem_min, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    useful = mf / max(flops, 1.0)
+    step = max(terms.values())
+    frac = (mf / PEAK_FLOPS) / step if step > 0 else 0.0   # MFU-style roofline fraction
+    return {
+        **rec,
+        "t_compute_s": comp, "t_memory_s": mem_min,
+        "t_memory_hlo_s": mem_hlo, "t_collective_s": coll,
+        "dominant": dom, "model_flops_per_chip": mf,
+        "useful_flops_ratio": useful, "roofline_fraction": frac,
+    }
+
+
+def guidance(row: dict) -> str:
+    d = row["dominant"]
+    if d == "memory":
+        if row["kind"] == "train":
+            return "cut HLO bytes: less remat recompute / fuse optimizer"
+        return "KV-cache bytes dominate: quantize KV or shard seq wider"
+    if d == "collective":
+        return "reduce all-gather volume: better FSDP/TP split or overlap"
+    return "compute-bound: good; raise useful-flops ratio"
+
+
+def run(path: str = DRYRUN_JSON):
+    if not os.path.exists(path):
+        emit("roofline", "dryrun_json_missing", 0, "", f"run dryrun --out {path}")
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for rec in recs:
+        if not rec.get("ok") or rec["mesh"] != "16x16":
+            continue
+        row = analyse(rec)
+        rows.append(row)
+        emit(
+            "roofline",
+            f"{row['arch']}|{row['shape']}",
+            row["roofline_fraction"],
+            "frac",
+            f"dom={row['dominant']} comp={row['t_compute_s']:.3e}s "
+            f"mem={row['t_memory_s']:.3e}s coll={row['t_collective_s']:.3e}s "
+            f"useful={row['useful_flops_ratio']:.2f}",
+        )
+    ok_multi = sum(1 for r in recs if r.get("ok") and r["mesh"] == "2x16x16")
+    emit("roofline", "multi_pod_cells_ok", ok_multi, "cells")
+    return rows
+
+
+def table(path: str = DRYRUN_JSON) -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    rows = run(path)
+    out = [
+        "| arch | shape | compute s | memory(min) s | memory(hlo) s | "
+        "collective s | dominant | useful FLOPs | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_memory_hlo_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {guidance(r)} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table())

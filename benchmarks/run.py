@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure + roofline.
+
+Prints ``table,name,value,unit,note`` CSV rows.  Run with
+``PYTHONPATH=src python -m benchmarks.run`` (optionally ``--only fig15``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "table1_direct",
+    "table2_policy",
+    "table4_weights",
+    "fig12_14_throughput",
+    "fig15_kv_ratio",
+    "fig16_planes",
+    "fig18_21_dram",
+    "table5_ppa",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module filter")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("table,name,value,unit,note")
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception as e:  # keep the suite running
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

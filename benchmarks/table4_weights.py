@@ -1,0 +1,46 @@
+"""Table IV — lossless weight compression under TRACE, by offline format.
+
+Paper anchors: BF16 ratio 1.32-1.34 (24-25.6% savings); FP8 1.09-1.11
+(8-10%); INT4 1.01-1.02 (0.9-2.1%); total savings vs BF16 at INT4 ≈ 75%.
+"""
+
+from __future__ import annotations
+
+from repro.core import synth
+from repro.core.tier import make_device
+
+from .common import emit
+
+
+def run():
+    n = 2 << 20
+    for fmt, anchor in (("bf16", "1.32-1.34"), ("fp8", "1.09-1.11"),
+                        ("int4", "1.01-1.02")):
+        if fmt == "bf16":
+            # BF16 containers through the bit-plane path
+            u = synth.weights(n, "bf16", seed=1)
+            dev = make_device("trace", codec="zstd")
+            dev.write_tensor("w", u)
+            ratio = dev.stats.compression_ratio
+            stored = n * 2 / ratio
+        else:
+            # native packed quantized bitstream → byte-plane compression
+            u = synth.weights(n, fmt, seed=1)
+            q = synth.quantized_bits(u, fmt)
+            dev = make_device("trace", codec="zstd", block_elems=2048)
+            # device sees the packed bytes as u16 containers two-at-a-time
+            import numpy as np
+
+            qq = q if q.size % 2 == 0 else np.pad(q, (0, 1))
+            dev.write_tensor("w", qq.view(np.uint16))
+            ratio = dev.stats.compression_ratio
+            stored = q.size / ratio
+        emit("table4", f"weights_{fmt}_trace_zstd_ratio", ratio, "x",
+             f"paper {anchor}")
+        total_sav = (1 - stored / (n * 2)) * 100
+        emit("table4", f"weights_{fmt}_total_savings_vs_bf16", total_sav, "%",
+             "paper bf16 25%, fp8 54%, int4 75%")
+
+
+if __name__ == "__main__":
+    run()

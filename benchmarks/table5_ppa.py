@@ -1,0 +1,50 @@
+"""Table V / Figs. 22-23 — controller PPA and load-to-use latency.
+
+Area/power constants are the paper's ASAP7 synthesis data (labelled as
+such in core/controller.py); the cycle model is exercised here and checked
+against every published operating point.
+"""
+
+from __future__ import annotations
+
+from repro.core.controller import (
+    PPA_TABLE,
+    load_to_use_cycles,
+    staging_sram_bytes,
+)
+
+from .common import emit
+
+
+def run():
+    # Table V anchors
+    emit("table5", "plain_cycles", load_to_use_cycles("plain"), "cyc", "paper 71")
+    emit("table5", "gcomp_cycles", load_to_use_cycles("gcomp"), "cyc", "paper 84")
+    emit("table5", "trace_cycles", load_to_use_cycles("trace"), "cyc", "paper 89")
+    t, g = PPA_TABLE["trace"], PPA_TABLE["gcomp"]
+    emit("table5", "trace_area_overhead", (t.area_mm2 / g.area_mm2 - 1) * 100,
+         "%", "paper 7.2%")
+    emit("table5", "trace_power_overhead", (t.power_w / g.power_w - 1) * 100,
+         "%", "paper 4.7%")
+    emit("table5", "trace_latency_overhead",
+         (load_to_use_cycles("trace") / load_to_use_cycles("gcomp") - 1) * 100,
+         "%", "paper 6.0%")
+
+    # Fig. 23: latency vs compression ratio + bypass
+    emit("fig23", "trace_cycles_at_1.5x",
+         load_to_use_cycles("trace", comp_ratio=1.5), "cyc", "paper 89")
+    emit("fig23", "trace_cycles_at_3.0x",
+         load_to_use_cycles("trace", comp_ratio=3.0), "cyc", "paper 85")
+    emit("fig23", "trace_cycles_bypass",
+         load_to_use_cycles("trace", bypass=True), "cyc", "paper 76")
+    emit("fig23", "trace_cycles_meta_miss",
+         load_to_use_cycles("trace", meta_hit=False), "cyc",
+         "+1 DRAM window (paper §IV-E)")
+
+    # Eq. 4 staging buffer sizing
+    emit("table5", "kv_staging_sram_64tok_1024ch",
+         staging_sram_bytes(64, 1024), "B", "Eq. 4")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""Test path setup: make ``repro`` (src layout) and ``benchmarks``
+importable regardless of how pytest is invoked.  Deliberately does NOT
+set XLA_FLAGS — tests must see the real single-device CPU environment
+(only launch/dryrun.py forces 512 host devices, and it is never imported
+from tests)."""
+
+import os
+import sys
+
+ROOT = os.path.dirname(__file__)
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,45 @@
+"""Assigned architecture registry: ``--arch <id>`` resolves here."""
+
+from .base import (
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    applicable_shapes,
+    smoke_config,
+)
+from .llava_next_34b import CONFIG as llava_next_34b
+from .stablelm_12b import CONFIG as stablelm_12b
+from .qwen1_5_32b import CONFIG as qwen1_5_32b
+from .qwen2_0_5b import CONFIG as qwen2_0_5b
+from .nemotron_4_340b import CONFIG as nemotron_4_340b
+from .zamba2_7b import CONFIG as zamba2_7b
+from .falcon_mamba_7b import CONFIG as falcon_mamba_7b
+from .grok_1_314b import CONFIG as grok_1_314b
+from .deepseek_v2_lite_16b import CONFIG as deepseek_v2_lite_16b
+from .hubert_xlarge import CONFIG as hubert_xlarge
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        llava_next_34b,
+        stablelm_12b,
+        qwen1_5_32b,
+        qwen2_0_5b,
+        nemotron_4_340b,
+        zamba2_7b,
+        falcon_mamba_7b,
+        grok_1_314b,
+        deepseek_v2_lite_16b,
+        hubert_xlarge,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,19 @@
+"""LLaVA-NeXT 34B — VLM backbone (anyres tiling frontend is a stub;
+input_specs provides precomputed patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab=64000,
+    mlp="swiglu",
+    frontend="vision",
+)

@@ -1,0 +1,14 @@
+"""TRACE core: bit-plane substrate, KV transform, elastic precision,
+codecs, device models, and the paper's analytic system models."""
+
+from . import bitplane, codec, controller, dram_model, kv_transform, precision
+from . import system_model, tier
+from .precision import PrecisionView, FULL, MAN4, MAN2, MAN0, VIEWS
+from .tier import PlainDevice, GCompDevice, TraceDevice, make_device
+
+__all__ = [
+    "bitplane", "codec", "controller", "dram_model", "kv_transform",
+    "precision", "system_model", "tier",
+    "PrecisionView", "FULL", "MAN4", "MAN2", "MAN0", "VIEWS",
+    "PlainDevice", "GCompDevice", "TraceDevice", "make_device",
+]

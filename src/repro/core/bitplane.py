@@ -1,0 +1,137 @@
+"""Bit-plane disaggregation — the physical substrate of TRACE (paper §III-A).
+
+A block of ``m`` values, each ``B`` bits wide, is stored as the *transpose*
+of its logical bit-matrix: ``B`` bit-planes, each a packed bitstream of
+``m`` bits (Eq. 1-2 of the paper).  Plane ``i`` collects bit position ``i``
+(0 = LSB) of every element.  The transform is a pure permutation of bits,
+hence exactly lossless for any payload including NaN/Inf/subnormals.
+
+Two implementations live here:
+
+* numpy (``pack_planes`` / ``unpack_planes``) — the device-side model used
+  by the memory-tier simulator and the codecs.  Planes are returned as a
+  ``(B, m//8) uint8`` array so each plane is a contiguous byte stream, the
+  exact representation handed to the inline codec.
+* jax (``pack_planes_jnp`` / ``unpack_planes_jnp``) — reference used by the
+  Pallas kernels' oracles and by the elastic-precision serving path.
+
+BF16 field layout (bit position, 0 = LSB):
+    sign      = bit 15
+    exponent  = bits 14..7   (8 bits)
+    mantissa  = bits 6..0    (7 bits)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Field layout constants (BF16 container; INT8/FP8 use the low bits).
+# ---------------------------------------------------------------------------
+BF16_BITS = 16
+SIGN_BIT = 15
+EXP_HI, EXP_LO = 14, 7          # inclusive bit range of the exponent field
+MAN_HI, MAN_LO = 6, 0           # inclusive bit range of the mantissa field
+EXP_BITS = EXP_HI - EXP_LO + 1  # 8
+MAN_BITS = MAN_HI - MAN_LO + 1  # 7
+
+# Default device block: 2048 BF16 elements = 4 KiB, aligned to DRAM rows
+# (paper §III-A "Line-rate implementation").
+BLOCK_ELEMS = 2048
+BLOCK_BYTES = BLOCK_ELEMS * 2
+
+
+def bf16_to_u16(x: np.ndarray) -> np.ndarray:
+    """View a bfloat16/uint16 array as uint16 bit patterns."""
+    if x.dtype == np.uint16:
+        return x
+    # np has no bfloat16; callers hand us ml_dtypes bfloat16 or jnp arrays.
+    return np.asarray(x).view(np.uint16)
+
+
+def u16_to_bf16(u: np.ndarray):
+    import ml_dtypes  # ships with jax
+
+    return u.astype(np.uint16).view(ml_dtypes.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# numpy pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack_planes(u16: np.ndarray, bits: int = BF16_BITS) -> np.ndarray:
+    """Disaggregate ``u16`` (flat uint16, length multiple of 8) into packed
+    bit-planes.
+
+    Returns ``planes``: uint8 array of shape ``(bits, len(u16) // 8)``;
+    ``planes[i]`` is the packed stream of bit ``i`` (0 = LSB) across all
+    elements, MSB-first within each byte (np.packbits default), so that
+    elements 0..7 land in byte 0.
+    """
+    u16 = np.ascontiguousarray(u16, dtype=np.uint16).ravel()
+    if u16.size % 8:
+        raise ValueError(f"block length {u16.size} not a multiple of 8")
+    # (bits, m) bit matrix: row i = bit i of every element.
+    shifts = np.arange(bits, dtype=np.uint16)[:, None]
+    bitmat = (u16[None, :] >> shifts) & np.uint16(1)
+    return np.packbits(bitmat.astype(np.uint8), axis=1)
+
+
+def unpack_planes(planes: np.ndarray, n_elems: int, bits: int = BF16_BITS) -> np.ndarray:
+    """Inverse of :func:`pack_planes` → flat uint16 of length ``n_elems``."""
+    bitmat = np.unpackbits(planes, axis=1, count=n_elems).astype(np.uint16)
+    shifts = np.arange(bits, dtype=np.uint16)[:, None]
+    return np.bitwise_or.reduce(bitmat << shifts, axis=0)
+
+
+def plane_bytes(n_elems: int) -> int:
+    """Bytes per plane for a block of ``n_elems`` elements."""
+    return (n_elems + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# jnp pack / unpack (oracle for the Pallas kernels; also used in serving)
+# ---------------------------------------------------------------------------
+
+def pack_planes_jnp(u16: jnp.ndarray, bits: int = BF16_BITS) -> jnp.ndarray:
+    """jnp version of :func:`pack_planes`.
+
+    Input (m,) uint16 → output (bits, m // 8) uint8, identical bytes to the
+    numpy path.
+    """
+    m = u16.shape[-1]
+    shifts = jnp.arange(bits, dtype=jnp.uint16)[:, None]
+    bitmat = ((u16.astype(jnp.uint16)[None, :] >> shifts) & jnp.uint16(1)).astype(jnp.uint8)
+    # pack MSB-first groups of 8: weights 128..1
+    grouped = bitmat.reshape(bits, m // 8, 8)
+    weights = (jnp.uint8(1) << jnp.arange(7, -1, -1, dtype=jnp.uint8))
+    return jnp.sum(grouped * weights[None, None, :], axis=-1, dtype=jnp.uint8)
+
+
+def unpack_planes_jnp(planes: jnp.ndarray, n_elems: int, bits: int = BF16_BITS) -> jnp.ndarray:
+    nbytes = planes.shape[-1]
+    shifts_in = jnp.arange(7, -1, -1, dtype=jnp.uint8)  # MSB-first
+    bitmat = ((planes[:, :, None] >> shifts_in[None, None, :]) & jnp.uint8(1))
+    bitmat = bitmat.reshape(bits, nbytes * 8)[:, :n_elems].astype(jnp.uint16)
+    shifts = jnp.arange(bits, dtype=jnp.uint16)[:, None]
+    return jnp.sum(bitmat << shifts, axis=0).astype(jnp.uint16)
+
+
+# ---------------------------------------------------------------------------
+# Block helpers
+# ---------------------------------------------------------------------------
+
+def iter_blocks(u16: np.ndarray, block_elems: int = BLOCK_ELEMS):
+    """Yield fixed-size blocks of a flat uint16 tensor, zero-padding the tail.
+
+    Yields ``(block, valid)`` where ``valid`` is the number of real elements.
+    """
+    u16 = u16.ravel()
+    n = u16.size
+    for start in range(0, n, block_elems):
+        chunk = u16[start : start + block_elems]
+        valid = chunk.size
+        if valid < block_elems:
+            chunk = np.pad(chunk, (0, block_elems - valid))
+        yield chunk, valid

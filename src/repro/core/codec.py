@@ -1,0 +1,201 @@
+"""Commodity lossless codecs used by the device model (paper §III-B).
+
+TRACE deliberately reuses *generic* codecs — the gain comes from changing
+the codec input (plane streams instead of mixed-field words), not from a
+bespoke compressor.  We model the paper's two codecs:
+
+* ``lz4`` — a from-scratch LZ4 *block format* encoder/decoder (the offline
+  environment has no lz4 binding).  Greedy hash-chain matching, standard
+  end-of-block rules, byte-exact round-trip; this stands in for the 32-lane
+  streaming LZ4 engine of the controller (paper §IV-E).
+* ``zstd`` — the real Zstandard via the ``zstandard`` package.
+
+Both are exposed through a tiny registry with block-level *bypass*: when a
+block is incompressible the device stores it raw and marks the index entry
+(paper §III-D "Bypass and correctness invariants").
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+
+    _ZSTD_C = _zstd.ZstdCompressor(level=3)
+    _ZSTD_D = _zstd.ZstdDecompressor()
+except Exception:  # pragma: no cover
+    _zstd = None
+
+_HASH_LOG = 13
+_HASH_SIZE = 1 << _HASH_LOG
+_MIN_MATCH = 4
+_MFLIMIT = 12          # match must not start within last 12 bytes
+_LAST_LITERALS = 5     # last 5 bytes are always literals
+
+
+# ---------------------------------------------------------------------------
+# LZ4 block format
+# ---------------------------------------------------------------------------
+
+def _lz4_hash(seq_u32: int) -> int:
+    return (seq_u32 * 2654435761) >> (32 - _HASH_LOG) & (_HASH_SIZE - 1)
+
+
+def lz4_compress(data: bytes) -> bytes:
+    """Greedy LZ4 block-format compression (pure python + numpy hashing)."""
+    n = len(data)
+    if n == 0:
+        return b"\x00"
+    buf = np.frombuffer(data, dtype=np.uint8)
+    out = bytearray()
+    if n >= _MIN_MATCH:
+        # vectorised 4-byte little-endian words + hashes for every position
+        w = (
+            buf[:-3].astype(np.uint32)
+            | (buf[1:-2].astype(np.uint32) << 8)
+            | (buf[2:-1].astype(np.uint32) << 16)
+            | (buf[3:].astype(np.uint32) << 24)
+        )
+        hashes = ((w * np.uint32(2654435761)) >> np.uint32(32 - _HASH_LOG)).astype(
+            np.int64
+        )
+    table = np.full(_HASH_SIZE, -1, dtype=np.int64)
+
+    def emit(lit_start: int, lit_end: int, match_len: int, offset: int):
+        lit_len = lit_end - lit_start
+        tok_lit = min(lit_len, 15)
+        tok_match = min(match_len - _MIN_MATCH, 15) if match_len else 0
+        out.append((tok_lit << 4) | tok_match)
+        rest = lit_len - 15
+        while rest >= 0:
+            out.append(min(rest, 255))
+            if rest < 255:
+                break
+            rest -= 255
+        out.extend(data[lit_start:lit_end])
+        if match_len:
+            out.append(offset & 0xFF)
+            out.append(offset >> 8)
+            rest = match_len - _MIN_MATCH - 15
+            while rest >= 0:
+                out.append(min(rest, 255))
+                if rest < 255:
+                    break
+                rest -= 255
+
+    i = 0
+    anchor = 0
+    limit = n - _MFLIMIT
+    while i < limit:
+        h = hashes[i]
+        cand = table[h]
+        table[h] = i
+        if cand >= 0 and i - cand <= 0xFFFF and w[cand] == w[i]:
+            # extend match forward
+            mlen = _MIN_MATCH
+            max_len = n - _LAST_LITERALS - i
+            while mlen < max_len and data[cand + mlen] == data[i + mlen]:
+                mlen += 1
+            emit(anchor, i, mlen, i - cand)
+            # insert a couple of positions inside the match to help later refs
+            step_end = min(i + mlen, limit)
+            for j in range(i + 1, min(i + 3, step_end)):
+                table[hashes[j]] = j
+            i += mlen
+            anchor = i
+        else:
+            i += 1
+    # final literals
+    emit(anchor, n, 0, 0)
+    return bytes(out)
+
+
+def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
+    out = bytearray()
+    i, n = 0, len(comp)
+    while i < n:
+        token = comp[i]
+        i += 1
+        lit_len = token >> 4
+        if lit_len == 15:
+            while True:
+                b = comp[i]
+                i += 1
+                lit_len += b
+                if b != 255:
+                    break
+        out.extend(comp[i : i + lit_len])
+        i += lit_len
+        if i >= n:
+            break  # last sequence has no match part
+        offset = comp[i] | (comp[i + 1] << 8)
+        i += 2
+        mlen = (token & 0xF) + _MIN_MATCH
+        if (token & 0xF) == 15:
+            while True:
+                b = comp[i]
+                i += 1
+                mlen += b
+                if b != 255:
+                    break
+        start = len(out) - offset
+        for k in range(mlen):  # may overlap — must copy byte-wise
+            out.append(out[start + k])
+        if max_out is not None and len(out) > max_out:
+            raise ValueError("decompressed size exceeds bound")
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+# zstd wrappers
+# ---------------------------------------------------------------------------
+
+def zstd_compress(data: bytes) -> bytes:
+    if _zstd is None:  # pragma: no cover
+        raise RuntimeError("zstandard not available")
+    return _ZSTD_C.compress(data)
+
+
+def zstd_decompress(data: bytes, max_out: int | None = None) -> bytes:
+    return _ZSTD_D.decompress(data, max_output_size=max_out or 0)
+
+
+# ---------------------------------------------------------------------------
+# Registry + block API with bypass
+# ---------------------------------------------------------------------------
+
+CODECS: Dict[str, Tuple[Callable[[bytes], bytes], Callable[..., bytes]]] = {
+    "lz4": (lz4_compress, lz4_decompress),
+    "zstd": (zstd_compress, zstd_decompress),
+    "none": (lambda b: b, lambda b, max_out=None: b),
+}
+
+RAW, COMPRESSED = 0, 1
+
+
+def compress_block(data: bytes, codec: str) -> tuple[bytes, int]:
+    """Compress one block; fall back to raw storage when incompressible.
+
+    Returns ``(payload, flag)`` with flag ∈ {RAW, COMPRESSED}.
+    """
+    c, _ = CODECS[codec]
+    comp = c(data)
+    if len(comp) >= len(data):
+        return data, RAW
+    return comp, COMPRESSED
+
+
+def decompress_block(payload: bytes, flag: int, codec: str, orig_len: int) -> bytes:
+    if flag == RAW:
+        return payload
+    _, d = CODECS[codec]
+    out = d(payload, max_out=orig_len)
+    return out
+
+
+def ratio(orig: int, comp: int) -> float:
+    """Compression ratio S_orig / S_comp (≥ 1 is a gain)."""
+    return orig / max(comp, 1)

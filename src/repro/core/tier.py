@@ -1,0 +1,317 @@
+"""CXL Type-3 device models — Plain / GComp / TRACE (paper Table III).
+
+These are functional + traffic models of the device-internal pipeline.
+All three expose the same host-visible semantics (byte-exact tensors per
+view); they differ only in the device-internal representation and hence in
+the bytes stored in device DRAM and moved per access — exactly the paper's
+correctness invariant (§III-D).
+
+On TPU systems the "CXL tier" maps to host DRAM behind PCIe used for KV /
+weight offload; the device model therefore doubles as the offload-tier
+backend of the serving runtime (runtime/serving.py).
+
+Accounting conventions (per read):
+  * ``dram_bytes``  — bytes the device DRAM actually serves (compressed
+    planes for TRACE, compressed 4 KB blocks for GComp, raw words for
+    Plain).  Plane-aligned fetch physically skips unfetched planes.
+  * ``link_bytes``  — host-visible payload returned over CXL.mem (the
+    reconstructed view; controller-side decompression per Fig. 11).
+  * ``index_bytes`` — metadata traffic (64 B/entry on an index-cache miss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import codec as codecs
+from .bitplane import (
+    BF16_BITS,
+    BLOCK_ELEMS,
+    iter_blocks,
+    pack_planes,
+    plane_bytes,
+    unpack_planes,
+)
+from .kv_transform import KVBlockMeta, kv_inverse, kv_forward
+from .precision import EXP_BITS, MAN_BITS, PrecisionView, FULL, reconstruct_u16
+
+INDEX_ENTRY_BYTES = 64  # paper §III-D: one compact entry per 4 KB block
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    dram_bytes_stored: int = 0      # capacity footprint (compressed)
+    dram_bytes_read: int = 0
+    dram_bytes_written: int = 0
+    link_bytes_out: int = 0
+    link_bytes_in: int = 0
+    index_bytes: int = 0
+    index_hits: int = 0
+    index_misses: int = 0
+    blocks: int = 0
+    raw_bytes_stored: int = 0       # logical (uncompressed) footprint
+
+    def reset_traffic(self):
+        self.dram_bytes_read = 0
+        self.dram_bytes_written = 0
+        self.link_bytes_out = 0
+        self.link_bytes_in = 0
+        self.index_bytes = 0
+        self.index_hits = self.index_misses = 0
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bytes_stored / max(self.dram_bytes_stored, 1)
+
+
+@dataclasses.dataclass
+class _Block:
+    """One 4 KB logical block in device DRAM."""
+
+    payloads: List[bytes]            # per-plane (TRACE) or single (word)
+    flags: List[int]                 # codec.RAW / codec.COMPRESSED
+    valid_elems: int
+    kv_meta: Optional[KVBlockMeta] = None
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(len(p) for p in self.payloads)
+
+
+class _IndexCache:
+    """On-chip plane-index cache (paper Fig. 11, metadata management)."""
+
+    def __init__(self, capacity_entries: int = 4096):
+        self.capacity = capacity_entries
+        self._lru: Dict[tuple, None] = {}
+
+    def access(self, key: tuple) -> bool:
+        hit = key in self._lru
+        if hit:
+            self._lru.pop(key)
+        self._lru[key] = None
+        if len(self._lru) > self.capacity:
+            self._lru.pop(next(iter(self._lru)))
+        return hit
+
+
+class BaseDevice:
+    """Common store / stats plumbing."""
+
+    name = "base"
+
+    def __init__(self, codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
+                 index_cache_entries: int = 4096):
+        self.codec = codec
+        self.block_elems = block_elems
+        self.stats = DeviceStats()
+        self._tensors: Dict[str, List[_Block]] = {}
+        self._shapes: Dict[str, tuple] = {}
+        self._index = _IndexCache(index_cache_entries)
+
+    # -- helpers -------------------------------------------------------------
+    def _commit(self, name: str, block: _Block):
+        self._tensors.setdefault(name, []).append(block)
+        self.stats.blocks += 1
+        self.stats.dram_bytes_stored += block.stored_bytes
+        self.stats.dram_bytes_written += block.stored_bytes
+        self.stats.raw_bytes_stored += block.valid_elems * 2
+
+    def _touch_index(self, name: str, i: int):
+        if self._index.access((name, i)):
+            self.stats.index_hits += 1
+        else:
+            self.stats.index_misses += 1
+            self.stats.index_bytes += INDEX_ENTRY_BYTES
+            self.stats.dram_bytes_read += INDEX_ENTRY_BYTES
+
+    def footprint(self, name: str) -> int:
+        return sum(b.stored_bytes for b in self._tensors[name])
+
+    def logical_bytes(self, name: str) -> int:
+        return sum(b.valid_elems for b in self._tensors[name]) * 2
+
+    def delete(self, name: str):
+        for b in self._tensors.pop(name, []):
+            self.stats.dram_bytes_stored -= b.stored_bytes
+            self.stats.raw_bytes_stored -= b.valid_elems * 2
+            self.stats.blocks -= 1
+        self._shapes.pop(name, None)
+
+
+class PlainDevice(BaseDevice):
+    """CXL-Plain: word-major, no compression, full-container fetch."""
+
+    name = "plain"
+
+    def write_tensor(self, name: str, u16: np.ndarray):
+        self._shapes[name] = u16.shape
+        self.stats.link_bytes_in += u16.size * 2
+        for chunk, valid in iter_blocks(u16, self.block_elems):
+            self._commit(name, _Block([chunk.tobytes()], [codecs.RAW], valid))
+
+    # KV arrives token-major; a word device stores it verbatim.
+    write_kv = write_tensor
+
+    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
+        """Always moves full containers; precision conversion is host-side."""
+        out = []
+        for i, b in enumerate(self._tensors[name]):
+            self._touch_index(name, i)
+            self.stats.dram_bytes_read += len(b.payloads[0])
+            u16 = np.frombuffer(b.payloads[0], dtype=np.uint16)[: b.valid_elems]
+            out.append(u16)
+        flat = np.concatenate(out)
+        self.stats.link_bytes_out += flat.size * 2
+        flat = reconstruct_u16(flat, view) if not view.is_full else flat
+        return flat.reshape(self._shapes[name])
+
+    read_kv = read_tensor
+
+
+class GCompDevice(PlainDevice):
+    """CXL-GComp: word-major + generic inline 4 KB block compression."""
+
+    name = "gcomp"
+
+    def write_tensor(self, name: str, u16: np.ndarray):
+        self._shapes[name] = u16.shape
+        self.stats.link_bytes_in += u16.size * 2
+        for chunk, valid in iter_blocks(u16, self.block_elems):
+            payload, flag = codecs.compress_block(chunk.tobytes(), self.codec)
+            self._commit(name, _Block([payload], [flag], valid))
+
+    write_kv = write_tensor
+
+    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
+        out = []
+        for i, b in enumerate(self._tensors[name]):
+            self._touch_index(name, i)
+            self.stats.dram_bytes_read += len(b.payloads[0])
+            raw = codecs.decompress_block(
+                b.payloads[0], b.flags[0], self.codec, self.block_elems * 2
+            )
+            u16 = np.frombuffer(raw, dtype=np.uint16)[: b.valid_elems]
+            out.append(u16)
+        flat = np.concatenate(out)
+        self.stats.link_bytes_out += flat.size * 2
+        flat = reconstruct_u16(flat, view) if not view.is_full else flat
+        return flat.reshape(self._shapes[name])
+
+    read_kv = read_tensor
+
+
+class TraceDevice(BaseDevice):
+    """TRACE: bit-plane substrate + KV transform + plane-aligned fetch."""
+
+    name = "trace"
+
+    def __init__(self, codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
+                 index_cache_entries: int = 4096, kv_window: int = 64):
+        super().__init__(codec, block_elems, index_cache_entries)
+        self.kv_window = kv_window
+        self._kv_staging: Dict[str, list] = {}   # stream → [token rows]
+        self._kv_channels: Dict[str, int] = {}
+
+    # -- weights: direct bit-plane encoding (paper §III-B) -------------------
+    def write_tensor(self, name: str, u16: np.ndarray):
+        self._shapes[name] = u16.shape
+        self.stats.link_bytes_in += u16.size * 2
+        for chunk, valid in iter_blocks(u16, self.block_elems):
+            planes = pack_planes(chunk)
+            payloads, flags = [], []
+            for p in range(BF16_BITS):
+                pay, fl = codecs.compress_block(planes[p].tobytes(), self.codec)
+                payloads.append(pay)
+                flags.append(fl)
+            self._commit(name, _Block(payloads, flags, valid))
+
+    # -- KV write path: staging buffer → transform → planes (Fig. 8) ---------
+    def write_kv(self, stream: str, tokens_u16: np.ndarray):
+        """Append token-major rows ``(t, C)`` to a KV stream."""
+        if tokens_u16.ndim == 1:
+            tokens_u16 = tokens_u16[None, :]
+        C = tokens_u16.shape[1]
+        self._kv_channels[stream] = C
+        buf = self._kv_staging.setdefault(stream, [])
+        self.stats.link_bytes_in += tokens_u16.size * 2
+        for row in tokens_u16:
+            buf.append(row)
+            if len(buf) >= self.kv_window:
+                self._commit_kv_window(stream)
+
+    def flush_kv(self, stream: str):
+        if self._kv_staging.get(stream):
+            self._commit_kv_window(stream)
+
+    def _commit_kv_window(self, stream: str):
+        buf = self._kv_staging[stream]
+        block = np.stack(buf, axis=0)
+        buf.clear()  # in place — write_kv holds a reference to this list
+        transformed, meta = kv_forward(block)
+        # pad to byte multiple for plane packing
+        n = transformed.size
+        if n % 8:
+            transformed = np.pad(transformed, (0, 8 - n % 8))
+        planes = pack_planes(transformed)
+        payloads, flags = [], []
+        for p in range(BF16_BITS):
+            pay, fl = codecs.compress_block(planes[p].tobytes(), self.codec)
+            payloads.append(pay)
+            flags.append(fl)
+        blk = _Block(payloads, flags, n, kv_meta=meta)
+        self._commit(stream, blk)
+
+    # -- reads: plane-aligned fetch + reconstruction (Eq. 6-8) ---------------
+    def _fetch_planes(self, name: str, i: int, b: _Block,
+                      plane_set: tuple) -> np.ndarray:
+        self._touch_index(name, i)
+        nbytes = plane_bytes(((b.valid_elems + 7) // 8) * 8)
+        planes = np.zeros((BF16_BITS, nbytes), dtype=np.uint8)
+        for p in plane_set:
+            self.stats.dram_bytes_read += len(b.payloads[p])
+            raw = codecs.decompress_block(b.payloads[p], b.flags[p], self.codec, nbytes)
+            planes[p] = np.frombuffer(raw, dtype=np.uint8)
+        return planes
+
+    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
+        out = []
+        for i, b in enumerate(self._tensors[name]):
+            planes = self._fetch_planes(name, i, b, view.fetched_planes())
+            u16 = unpack_planes(planes, b.valid_elems)
+            out.append(reconstruct_u16(u16, view))
+        flat = np.concatenate(out)
+        self.stats.link_bytes_out += flat.size * view.bits // 8
+        return flat.reshape(self._shapes.get(name, flat.shape))
+
+    def read_kv(self, stream: str, view: PrecisionView = FULL) -> np.ndarray:
+        """Return token-major KV.  Exponent planes hold zigzag deltas, so KV
+        views always fetch all 8 exponent planes (they compress best) and
+        scale mantissa planes only (see precision.py note)."""
+        if view.r_e != EXP_BITS:
+            raise ValueError("KV views must keep the full (delta) exponent")
+        self.flush_kv(stream)
+        rows = []
+        for i, b in enumerate(self._tensors.get(stream, [])):
+            planes = self._fetch_planes(stream, i, b, view.fetched_planes())
+            stream_u16 = unpack_planes(planes, b.valid_elems)
+            meta = b.kv_meta
+            n_real = meta.n_tokens * meta.n_channels
+            # Invert the exponent-delta FIRST: guard-bit rounding may carry
+            # from mantissa into the exponent, which is only meaningful in
+            # the real-exponent domain (not the zigzag-delta domain).
+            token_major = kv_inverse(stream_u16[:n_real], meta)
+            rows.append(reconstruct_u16(token_major, view))
+        out = np.concatenate(rows, axis=0)
+        self.stats.link_bytes_out += out.size * view.bits // 8
+        return out
+
+
+DEVICE_KINDS = {"plain": PlainDevice, "gcomp": GCompDevice, "trace": TraceDevice}
+
+
+def make_device(kind: str, **kw) -> BaseDevice:
+    return DEVICE_KINDS[kind](**kw)

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for TRACE's compute hot-spots.
+
+The paper's controller performs three line-rate transforms that map to
+on-chip kernels on a TPU system (DESIGN.md §2):
+
+* bit-plane pack / elastic unpack+round  (bitplane.py)
+* cross-token KV exponent-delta          (kv_delta.py)
+* plane-fetch dequant matmul             (elastic_matmul.py)
+
+Wrappers in ops.py; pure-jnp oracles in ref.py.
+"""
+
+from .ops import (
+    bitplane_pack,
+    decode_attention,
+    elastic_matmul,
+    elastic_unpack,
+    kv_transform,
+    kv_transform_inv,
+)
+
+__all__ = [
+    "bitplane_pack",
+    "decode_attention",
+    "elastic_matmul",
+    "elastic_unpack",
+    "kv_transform",
+    "kv_transform_inv",
+]

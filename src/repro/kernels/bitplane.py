@@ -1,0 +1,130 @@
+"""Pallas TPU kernels: bit-plane pack / elastic unpack (paper §III-A/C).
+
+TPU adaptation (DESIGN.md §2): the paper's transpose runs in a CXL
+controller; on a TPU system the bit-plane layout lives in the offload
+tier / HBM and the transpose+reconstruction run on-chip, next to the
+consumer.  These kernels stream (R, C) uint16 tiles through VMEM:
+
+* ``pack_kernel``    — (R, C) u16 → (16, R, C//8) u8 plane stack.  One
+  grid step owns a (Br, C) row stripe; all 16 output planes of that
+  stripe are produced in-register (the bit-matrix transpose never touches
+  HBM, mirroring the paper's "transposition fully overlapped" claim).
+* ``unpack_kernel``  — inverse, with *elastic* plane masking + guard-plane
+  round-to-nearest-even fused in (Eq. 6/7): unfetched planes are never
+  read (their BlockSpec rows are masked out by zeroing — on real TPU the
+  fetched-plane subset is sliced by the caller, so HBM→VMEM bytes scale
+  with the view; see ops.elastic_unpack).
+
+Block shapes: C is kept whole per grid step (plane bytes stay contiguous
+along the minor axis — lane-dim friendly, multiples of 128 bytes when
+C ≥ 1024); Br rows per step bound VMEM: Br·C·2 B in + 16·Br·C/8 B out =
+4·Br·C bytes ≈ 1 MiB at the default (64, 4096).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.bitplane import BF16_BITS
+
+DEFAULT_BLOCK_R = 64
+
+
+def _pack_kernel(x_ref, out_ref):
+    """x: (Br, C) u16 → out: (16, Br, C//8) u8."""
+    x = x_ref[...].astype(jnp.int32)
+    br, c = x.shape
+    # bit i of every element, for all 16 planes: (16, Br, C)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (BF16_BITS, 1, 1), 0)
+    bits = (x[None] >> shifts) & 1
+    # pack groups of 8 along C, MSB-first: weights 128..1
+    grouped = bits.reshape(BF16_BITS, br, c // 8, 8)
+    w = (128 >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 8), 3))
+    out_ref[...] = jnp.sum(grouped * w, axis=-1).astype(jnp.uint8)
+
+
+def _unpack_kernel(planes_ref, out_ref, *, keep_mask: int, cut: int,
+                   do_round: bool):
+    """planes: (16, Br, C//8) u8 → out: (Br, C) u16, masked + rounded.
+
+    ``keep_mask``/``cut``/``do_round`` are compile-time view constants —
+    the alias decides the planes, never per-element values (paper §III-C).
+    """
+    p = planes_ref[...].astype(jnp.int32)
+    nb, br, c8 = p.shape
+    # unpack bytes → bits along the minor axis (MSB-first)
+    shifts_in = 7 - jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 8), 3)
+    bits = (p[..., None] >> shifts_in) & 1        # (16, Br, C//8, 8)
+    bits = bits.reshape(nb, br, c8 * 8)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (BF16_BITS, 1, 1), 0)
+    u = jnp.sum(bits << shifts, axis=0)           # (Br, C) int32 patterns
+
+    if do_round:
+        sign = u & 0x8000
+        mag = u & 0x7FFF
+        is_special = (u & 0x7F80) == 0x7F80
+        half = 1 << (cut - 1)
+        gmask = (1 << cut) - 1
+        guard = mag & gmask
+        lsb = (mag >> cut) & 1
+        round_up = (guard > half) | ((guard == half) & (lsb == 1))
+        mag_r = (mag & ~gmask) + (round_up.astype(jnp.int32) << cut)
+        mag_r = jnp.minimum(mag_r, 0x7F80)
+        special_out = u & keep_mask
+        man = u & 0x7F
+        nan_lost = is_special & (man != 0) & ((special_out & 0x7F) == 0)
+        special_out = jnp.where(nan_lost, special_out | 0x40, special_out)
+        u = jnp.where(is_special, special_out, sign | mag_r)
+    out_ref[...] = (u & keep_mask).astype(jnp.uint16)
+
+
+def pack_planes_pallas(x_u16: jnp.ndarray, block_r: int = DEFAULT_BLOCK_R,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(R, C) uint16 → (16, R, C//8) uint8 (C % 8 == 0, R % block_r == 0)."""
+    R, C = x_u16.shape
+    br = min(block_r, R)
+    assert R % br == 0 and C % 8 == 0
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BF16_BITS, br, C // 8), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BF16_BITS, R, C // 8), jnp.uint8),
+        interpret=interpret,
+    )(x_u16)
+
+
+def unpack_planes_pallas(planes: jnp.ndarray, *, r_e: int = 8, r_m: int = 7,
+                         d_m: int = 0, block_r: int = DEFAULT_BLOCK_R,
+                         interpret: bool = True) -> jnp.ndarray:
+    """(16, R, C//8) uint8 → (R, C) uint16 at view (r_e, r_m, d_m).
+
+    The full plane stack is accepted; unfetched planes are zeroed before
+    the call by ops.elastic_unpack (bytes-scaling happens there — the
+    kernel itself is the fused reconstruct).
+    """
+    _, R, C8 = planes.shape
+    br = min(block_r, R)
+    assert R % br == 0
+    keep = (
+        0x8000
+        | (((1 << r_e) - 1) << (15 - r_e))
+        | (((1 << r_m) - 1) << (7 - r_m))
+    )
+    cut = 7 - r_m
+    do_round = bool(d_m > 0 and r_e == 8 and (r_m, d_m) != (7, 0) and cut > 0)
+    kern = functools.partial(
+        _unpack_kernel, keep_mask=keep, cut=max(cut, 1), do_round=do_round
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((BF16_BITS, br, C8), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((br, C8 * 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C8 * 8), jnp.uint16),
+        interpret=interpret,
+    )(planes)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: decode attention over an fp8-stored KV cache.
+
+§Perf cell 2 residual: with ``kv_dtype=float8_e4m3fn`` the XLA path
+materializes a bf16 upcast of the WHOLE cache before the attention dots
+(≈2× cache bytes of temp on the CPU lowering; an extra HBM round-trip if
+unfused on TPU).  This kernel streams fp8 K/V tiles HBM→VMEM, upcasts
+in-register, and runs an online-softmax accumulation — HBM traffic is
+exactly the fp8 cache bytes, the TPU-side completion of the paper's
+"bytes move at stored precision" principle.
+
+Shapes (one decode step, GQA):
+    q: (B, H, hd) bf16          — current token's queries
+    k: (B, S, KV, hd) fp8/bf16  — cache keys
+    v: (B, S, KV, hd) fp8/bf16  — cache values
+    valid_len: int              — #valid cache slots (static per call)
+    out: (B, H, hd) f32
+
+Grid: (B, S // block_s); each step processes one (batch, key-block):
+online max/sum/accumulator carried in VMEM scratch across the S-grid
+(standard flash-decoding shape).  hd and KV·hd stay lane-aligned
+(multiples of 128 for the assigned archs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            valid_len: int, block_s: int, groups: int, scale: float):
+    si = pl.program_id(1)
+    n_s = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (H, hd)
+    k = k_ref[0].astype(jnp.float32)              # (block_s, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    H, hd = q.shape
+    KV = k.shape[1]
+    # GQA: repeat KV heads across groups in-register
+    kx = jnp.repeat(k, groups, axis=1)            # (block_s, H, hd)
+    vx = jnp.repeat(v, groups, axis=1)
+
+    s = jnp.einsum("hd,thd->ht", q, kx) * scale   # (H, block_s)
+    # mask slots beyond valid_len
+    pos = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1
+    )
+    s = jnp.where(pos < valid_len, s, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=1)                    # (H,)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])               # (H, block_s)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jnp.einsum("ht,thd->hd", p, vx)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...] / l_ref[...][:, None]
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, valid_len: int,
+    *, block_s: int = 512, interpret: bool = True,
+) -> jnp.ndarray:
+    """(B,H,hd) × (B,S,KV,hd) fp8/bf16 cache → (B,H,hd) f32, one token."""
+    B, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    assert H % KV == 0
+    groups = H // KV
+    bs = min(block_s, S)
+    assert S % bs == 0
+    scale = 1.0 / (hd ** 0.5)
+    kern = functools.partial(
+        _kernel, valid_len=valid_len, block_s=bs, groups=groups, scale=scale
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(B, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),        # running max
+            pltpu.VMEM((H,), jnp.float32),        # running denom
+            pltpu.VMEM((H, hd), jnp.float32),     # running accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: elastic-precision dequant matmul (Mechanism II).
+
+The consumer side of plane-aligned fetch on TPU: weights live in HBM as
+K-axis-packed bit-planes ``(16, K//8, N) uint8``; the runtime picks a
+precision view and passes ONLY the fetched planes — HBM→VMEM weight bytes
+scale as ``(9 + r_m + d_m)/16`` of BF16, the TPU analogue of the paper's
+"DRAM activations scale with requested precision".  Reconstruction
+(plane combine + guard round-to-nearest-even + bitcast to BF16) runs in
+VMEM, fused immediately ahead of the MXU dot.
+
+Hardware-codesign choices (guides: VMEM ~16 MiB/core, MXU 128×128):
+  * N stays the minor axis of every weight tile (lane-dim 128-aligned);
+    K-axis packing keeps unpack shifts on the sublane axis.
+  * Block (Bm, Bk, Bn) = (128, 512, 256) default: x tile 128·512·2 =
+    128 KiB, plane tile ≤ 16·64·256 = 256 KiB, acc 128·256·4 = 128 KiB —
+    well under VMEM with double-buffering.
+  * K-grid is the innermost loop; the f32 accumulator lives in the output
+    block across K steps (revisiting out[i,j] per k), standard Pallas
+    matmul pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, p_ref, o_ref, *, plane_ids: tuple, keep_mask: int,
+            cut: int, do_round: bool, n_k: int):
+    """x: (Bm, Bk) bf16; p: (P_f, Bk//8, Bn) u8; o: (Bm, Bn) f32."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[...].astype(jnp.int32)
+    pf, bk8, bn = p.shape
+    # unpack bytes → bits on the K (sublane) axis, MSB-first
+    shifts_in = 7 - jax.lax.broadcasted_iota(jnp.int32, (1, 1, 8, 1), 2)
+    bits = (p[:, :, None, :] >> shifts_in) & 1          # (P_f, Bk//8, 8, Bn)
+    bits = bits.reshape(pf, bk8 * 8, bn)
+    # combine planes at their true bit positions (compile-time constants)
+    u = jnp.zeros((bk8 * 8, bn), jnp.int32)
+    for slot, bitpos in enumerate(plane_ids):
+        u |= bits[slot] << bitpos
+
+    if do_round:
+        sign = u & 0x8000
+        mag = u & 0x7FFF
+        is_special = (u & 0x7F80) == 0x7F80
+        half = 1 << (cut - 1)
+        gmask = (1 << cut) - 1
+        guard = mag & gmask
+        lsb = (mag >> cut) & 1
+        round_up = (guard > half) | ((guard == half) & (lsb == 1))
+        mag_r = (mag & ~gmask) + (round_up.astype(jnp.int32) << cut)
+        mag_r = jnp.minimum(mag_r, 0x7F80)
+        special_out = u & keep_mask
+        nan_lost = is_special & ((u & 0x7F) != 0) & ((special_out & 0x7F) == 0)
+        special_out = jnp.where(nan_lost, special_out | 0x40, special_out)
+        u = jnp.where(is_special, special_out, sign | mag_r)
+    u = (u & keep_mask).astype(jnp.uint16)
+    w = jax.lax.bitcast_convert_type(u, jnp.bfloat16)   # (Bk, Bn)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+def elastic_matmul_pallas(
+    x: jnp.ndarray,
+    w_planes: jnp.ndarray,
+    r_m: int,
+    d_m: int = 1,
+    *,
+    block_m: int = 128,
+    block_k: int = 512,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x (M, K) bf16 × plane-packed W (16, K//8, N) → (M, N) f32 at the
+    (r_e=8, r_m, d_m) view.  Slices the fetched planes BEFORE the kernel —
+    the pallas_call never sees (nor moves) unfetched planes."""
+    M, K = x.shape
+    P, K8, N = w_planes.shape
+    assert K8 * 8 == K and P == 16
+    fetch = [15] + list(range(14, 6, -1)) + list(
+        range(6, 6 - min(r_m + d_m, 7), -1)
+    )
+    planes = w_planes[jnp.array(fetch)]       # (P_f, K//8, N) — bytes scale
+    pf = len(fetch)
+
+    bm, bk, bn = min(block_m, M), min(block_k, K), min(block_n, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and bk % 8 == 0
+
+    keep = 0x8000 | 0x7F80 | (((1 << r_m) - 1) << (7 - r_m))
+    cut = 7 - r_m
+    do_round = bool(d_m > 0 and r_m < 7 and cut > 0)
+
+    kern = functools.partial(
+        _kernel, plane_ids=tuple(fetch), keep_mask=keep,
+        cut=max(cut, 1), do_round=do_round, n_k=K // bk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((pf, bk // 8, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, planes)

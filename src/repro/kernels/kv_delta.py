@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: cross-token KV transform (Mechanism I, Fig. 8).
+
+Fuses the paper's Step 1+2 — token-major → channel-major transposition and
+per-channel exponent-delta (zigzag) — in one VMEM pass, so the staged KV
+window never round-trips to HBM between steps.  The inverse kernel restores
+token-major BF16 containers on the read path (part of T⁻¹∘R of Eq. 7).
+
+Tiling: one grid step owns a (n, Cb) token-window × channel-block tile and
+writes the (Cb, n) transposed tile.  ``n`` is the KV staging window (64-256
+tokens, Eq. 4 sizes the SRAM analogue) and fits VMEM alongside the channel
+block: 2·n·Cb·2 B ≈ 256 KiB at (256, 128).  The transpose happens in
+registers/VMEM (the paper's SRAM staging buffer).
+
+beta (per-channel base exponent) is a separate (C,) input computed by the
+host/stats pass — the modal exponent needs a histogram, which is cheap on
+the write path and constant-size metadata (§III-D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_C = 128
+
+
+def _fwd_kernel(x_ref, beta_ref, out_ref):
+    """x: (n, Cb) u16 token-major; beta: (Cb,) i32 → out: (Cb, n) u16."""
+    x = x_ref[...].astype(jnp.int32)
+    beta = beta_ref[...].astype(jnp.int32)
+    cm = x.T                                     # (Cb, n) — in-VMEM transpose
+    exp = (cm & 0x7F80) >> 7
+    d = jnp.remainder(exp - beta[:, None], 256)
+    s = jnp.where(d >= 128, d - 256, d)
+    z = jnp.where(s >= 0, 2 * s, -2 * s - 1)
+    out_ref[...] = ((cm & 0x807F) | (z << 7)).astype(jnp.uint16)
+
+
+def _inv_kernel(cm_ref, beta_ref, out_ref):
+    """cm: (Cb, n) u16 transformed; beta: (Cb,) i32 → out: (n, Cb) u16."""
+    cm = cm_ref[...].astype(jnp.int32)
+    beta = beta_ref[...].astype(jnp.int32)
+    z = (cm & 0x7F80) >> 7
+    s = jnp.where(z % 2 == 0, z // 2, -(z + 1) // 2)
+    exp = jnp.remainder(s + beta[:, None], 256)
+    out = (cm & 0x807F) | (exp << 7)
+    out_ref[...] = out.T.astype(jnp.uint16)
+
+
+def kv_delta_pallas(block_u16: jnp.ndarray, beta: jnp.ndarray,
+                    block_c: int = DEFAULT_BLOCK_C,
+                    interpret: bool = True) -> jnp.ndarray:
+    """(n, C) u16 + (C,) u8/i32 beta → (C, n) u16 transformed."""
+    n, C = block_u16.shape
+    bc = min(block_c, C)
+    assert C % bc == 0
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(C // bc,),
+        in_specs=[
+            pl.BlockSpec((n, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bc, n), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, n), jnp.uint16),
+        interpret=interpret,
+    )(block_u16, beta.astype(jnp.int32))
+
+
+def kv_delta_inv_pallas(cm_u16: jnp.ndarray, beta: jnp.ndarray,
+                        block_c: int = DEFAULT_BLOCK_C,
+                        interpret: bool = True) -> jnp.ndarray:
+    """(C, n) u16 transformed + (C,) beta → (n, C) u16 token-major."""
+    C, n = cm_u16.shape
+    bc = min(block_c, C)
+    assert C % bc == 0
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(C // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, n), lambda j: (j, 0)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, C), jnp.uint16),
+        interpret=interpret,
+    )(cm_u16, beta.astype(jnp.int32))

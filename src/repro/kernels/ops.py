@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret mode
+executes the kernel body in Python for correctness).  On TPU, pass
+``interpret=False`` — the BlockSpecs are written for VMEM tiling there.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitplane import BF16_BITS, SIGN_BIT, MAN_HI
+from .bitplane import pack_planes_pallas, unpack_planes_pallas
+from .elastic_matmul import elastic_matmul_pallas
+from .kv_delta import kv_delta_inv_pallas, kv_delta_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitplane_pack(x_u16: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """(R, C) uint16 → (16, R, C//8) uint8 plane stack."""
+    return pack_planes_pallas(x_u16, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_e", "r_m", "d_m", "interpret")
+)
+def elastic_unpack(
+    planes: jnp.ndarray, r_e: int = 8, r_m: int = 7, d_m: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Plane stack → (R, C) uint16 at a precision view.
+
+    Zeroes unfetched planes first (the bytes-scaling slice happens at the
+    storage layer; this wrapper keeps the full-stack signature so tests
+    can diff views cheaply), then runs the fused unpack+round kernel.
+    """
+    fetch = [SIGN_BIT] + list(range(14, 14 - r_e, -1)) + list(
+        range(MAN_HI, MAN_HI - min(r_m + d_m, 7), -1)
+    )
+    mask = jnp.zeros((BF16_BITS, 1, 1), jnp.uint8).at[jnp.array(fetch)].set(0xFF)
+    return unpack_planes_pallas(
+        planes & mask, r_e=r_e, r_m=r_m, d_m=d_m, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_transform(block_u16: jnp.ndarray, beta: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Token-major (n, C) → channel-major exponent-delta (C, n)."""
+    return kv_delta_pallas(block_u16, beta, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_transform_inv(cm_u16: jnp.ndarray, beta: jnp.ndarray,
+                     interpret: bool = True) -> jnp.ndarray:
+    return kv_delta_inv_pallas(cm_u16, beta, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_m", "d_m", "interpret")
+)
+def elastic_matmul(x: jnp.ndarray, w_planes: jnp.ndarray, r_m: int = 7,
+                   d_m: int = 0, interpret: bool = True) -> jnp.ndarray:
+    """x @ dequant(planes) with weight bytes ∝ (9 + r_m + d_m)/16."""
+    return elastic_matmul_pallas(x, w_planes, r_m, d_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("valid_len", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid_len: int, interpret: bool = True) -> jnp.ndarray:
+    """One-token GQA attention streaming an fp8-stored KV cache: HBM
+    traffic = stored (fp8) bytes; upcast + online softmax fused in VMEM."""
+    from .decode_attn import decode_attention_pallas
+
+    return decode_attention_pallas(q, k, v, valid_len, interpret=interpret)

@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose (bit-exact for
+the integer transforms) against these references.  The references are also
+the fallback path on backends without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitplane import BF16_BITS, EXP_BITS, MAN_BITS, MAN_HI, SIGN_BIT
+
+_EXP_ALL_ONES = jnp.uint16(((1 << EXP_BITS) - 1) << (MAN_HI + 1))
+
+
+# ---------------------------------------------------------------------------
+# bit-plane pack / unpack, minor-axis packing: (R, C) u16 <-> (16, R, C//8) u8
+# ---------------------------------------------------------------------------
+
+def pack_planes_2d(x_u16: jnp.ndarray, bits: int = BF16_BITS) -> jnp.ndarray:
+    """(R, C) uint16 → (bits, R, C//8) uint8; bit i of each element goes to
+    plane i; 8 consecutive minor-axis elements pack MSB-first per byte."""
+    R, C = x_u16.shape
+    shifts = jnp.arange(bits, dtype=jnp.uint16).reshape(bits, 1, 1)
+    bitmat = ((x_u16[None] >> shifts) & jnp.uint16(1)).astype(jnp.uint8)
+    grouped = bitmat.reshape(bits, R, C // 8, 8)
+    weights = jnp.uint8(1) << jnp.arange(7, -1, -1, dtype=jnp.uint8)
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint8)
+
+
+def unpack_planes_2d(planes: jnp.ndarray, bits: int = BF16_BITS) -> jnp.ndarray:
+    """Inverse of :func:`pack_planes_2d` → (R, C) uint16."""
+    _, R, Cb = planes.shape
+    shifts_in = jnp.arange(7, -1, -1, dtype=jnp.uint8)
+    bitmat = (planes[..., None] >> shifts_in) & jnp.uint8(1)
+    bitmat = bitmat.reshape(bits, R, Cb * 8).astype(jnp.uint16)
+    shifts = jnp.arange(bits, dtype=jnp.uint16).reshape(bits, 1, 1)
+    return jnp.sum(bitmat << shifts, axis=0).astype(jnp.uint16)
+
+
+# ---------------------------------------------------------------------------
+# elastic reconstruction (R operator, Eq. 7) on uint16 bit patterns
+# ---------------------------------------------------------------------------
+
+def reconstruct_u16_jnp(fetched: jnp.ndarray, r_e: int, r_m: int,
+                        d_m: int) -> jnp.ndarray:
+    """jnp port of core.precision.reconstruct_u16 (round-to-nearest-even at
+    the mantissa cut using guard planes, Inf/NaN preserved, LSB zero-pad)."""
+    x = fetched.astype(jnp.uint16)
+    if r_e == EXP_BITS and r_m == MAN_BITS:
+        return x
+
+    keep = jnp.uint16(
+        (1 << SIGN_BIT)
+        | (((1 << r_e) - 1) << (MAN_HI + 1 + EXP_BITS - r_e))
+        | (((1 << r_m) - 1) << (MAN_HI + 1 - r_m))
+    )
+    cut = MAN_HI - r_m + 1
+
+    if d_m == 0 or r_e != EXP_BITS:
+        return x & keep
+
+    sign = x & jnp.uint16(1 << SIGN_BIT)
+    mag = x & jnp.uint16((1 << SIGN_BIT) - 1)
+    is_special = (x & _EXP_ALL_ONES) == _EXP_ALL_ONES
+
+    half = jnp.uint16(1 << (cut - 1))
+    guard_mask = jnp.uint16((1 << cut) - 1)
+    guard = mag & guard_mask
+    lsb = (mag >> jnp.uint16(cut)) & jnp.uint16(1)
+    round_up = (guard > half) | ((guard == half) & (lsb == 1))
+    mag_r = (mag & ~guard_mask) + (
+        round_up.astype(jnp.uint16) << jnp.uint16(cut)
+    )
+    mag_r = jnp.minimum(mag_r, _EXP_ALL_ONES)
+
+    special_out = x & keep
+    if r_m > 0:
+        man_mask = jnp.uint16((1 << MAN_BITS) - 1)
+        nan_lost = (
+            is_special & ((x & man_mask) != 0) & ((special_out & man_mask) == 0)
+        )
+        special_out = jnp.where(
+            nan_lost, special_out | jnp.uint16(1 << MAN_HI), special_out
+        )
+    out = jnp.where(is_special, special_out, sign | mag_r)
+    return (out & keep).astype(jnp.uint16)
+
+
+def elastic_unpack_ref(planes: jnp.ndarray, r_e: int, r_m: int,
+                       d_m: int) -> jnp.ndarray:
+    """Plane-masked fetch + reconstruction: zero unfetched planes of a full
+    (16, R, C//8) stack, unpack, round.  Returns (R, C) uint16."""
+    fetch = [SIGN_BIT]
+    fetch += list(range(14, 14 - r_e, -1))
+    fetch += list(range(MAN_HI, MAN_HI - min(r_m + d_m, MAN_BITS), -1))
+    mask = jnp.zeros((BF16_BITS, 1, 1), jnp.uint8)
+    mask = mask.at[jnp.array(fetch)].set(0xFF)
+    u16 = unpack_planes_2d(planes & mask)
+    return reconstruct_u16_jnp(u16, r_e, r_m, d_m)
+
+
+# ---------------------------------------------------------------------------
+# KV exponent-delta transform (Mechanism I, Eq. 3-5)
+# ---------------------------------------------------------------------------
+
+def kv_delta_ref(block_u16: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """(n, C) u16 token-major + (C,) u8 base exponents → (C, n) u16
+    channel-major with zigzag exponent deltas (bit-exact vs numpy path)."""
+    cm = block_u16.T.astype(jnp.uint16)
+    exp = ((cm & jnp.uint16(0x7F80)) >> 7).astype(jnp.int32)
+    d = (exp - beta[:, None].astype(jnp.int32)) % 256
+    s = jnp.where(d >= 128, d - 256, d)
+    z = jnp.where(s >= 0, 2 * s, -2 * s - 1).astype(jnp.uint16)
+    return (cm & jnp.uint16(0x807F)) | (z << jnp.uint16(7))
+
+
+def kv_delta_inv_ref(cm_u16: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """(C, n) transformed channel-major → (n, C) token-major original."""
+    z = ((cm_u16 & jnp.uint16(0x7F80)) >> 7).astype(jnp.int32)
+    s = jnp.where(z % 2 == 0, z // 2, -(z + 1) // 2)
+    exp = ((s + beta[:, None].astype(jnp.int32)) % 256).astype(jnp.uint16)
+    out = (cm_u16 & jnp.uint16(0x807F)) | (exp << jnp.uint16(7))
+    return out.T
+
+
+# ---------------------------------------------------------------------------
+# elastic dequant matmul (Mechanism II consumer)
+# ---------------------------------------------------------------------------
+
+def elastic_matmul_ref(x: jnp.ndarray, w_planes: jnp.ndarray, r_m: int,
+                       d_m: int = 1) -> jnp.ndarray:
+    """x (M, K) bf16 @ dequant(w_planes) → (M, N) f32.
+
+    ``w_planes``: (16, K//8, N) uint8 — K-axis packed bit-planes of a
+    (K, N) BF16 weight matrix.  Only sign+exponent+(r_m+d_m) mantissa
+    planes participate (the rest are treated as unfetched/zero).
+    """
+    P, K8, N = w_planes.shape
+    fetch = [SIGN_BIT] + list(range(14, 6, -1)) + list(
+        range(MAN_HI, MAN_HI - min(r_m + d_m, MAN_BITS), -1)
+    )
+    mask = jnp.zeros((BF16_BITS, 1, 1), jnp.uint8).at[jnp.array(fetch)].set(0xFF)
+    planes = w_planes & mask
+    # unpack along K: (16, K//8, N) → (K, N) u16
+    shifts_in = jnp.arange(7, -1, -1, dtype=jnp.uint8).reshape(1, 1, 8, 1)
+    bits = (planes[:, :, None, :] >> shifts_in) & jnp.uint8(1)
+    bits = bits.reshape(P, K8 * 8, N).astype(jnp.uint16)
+    shifts = jnp.arange(P, dtype=jnp.uint16).reshape(P, 1, 1)
+    u16 = jnp.sum(bits << shifts, axis=0).astype(jnp.uint16)
+    u16 = reconstruct_u16_jnp(u16, EXP_BITS, r_m, d_m)
+    w = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid_len: int) -> jnp.ndarray:
+    """Oracle for the fp8-KV decode attention kernel.
+
+    q (B,H,hd) bf16; k/v (B,S,KV,hd) any float dtype; softmax over the
+    first ``valid_len`` slots; GQA via KV-head repetition → (B,H,hd) f32.
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    kx = jnp.repeat(k.astype(jnp.float32), groups, axis=2)
+    vx = jnp.repeat(v.astype(jnp.float32), groups, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kx) / (hd ** 0.5)
+    mask = jnp.arange(S)[None, None, :] < valid_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p, vx)
+
+
+def pack_weights_kmajor(w: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) bf16 → (16, K//8, N) uint8 K-axis-packed planes (host-side
+    prep for :func:`elastic_matmul_ref` and the Pallas kernel)."""
+    u16 = jax.lax.bitcast_convert_type(w.astype(jnp.bfloat16), jnp.uint16)
+    K, N = u16.shape
+    shifts = jnp.arange(BF16_BITS, dtype=jnp.uint16).reshape(-1, 1, 1)
+    bitmat = ((u16[None] >> shifts) & jnp.uint16(1)).astype(jnp.uint8)
+    grouped = bitmat.reshape(BF16_BITS, K // 8, 8, N)
+    weights = (jnp.uint8(1) << jnp.arange(7, -1, -1, dtype=jnp.uint8)).reshape(
+        1, 1, 8, 1
+    )
+    return jnp.sum(grouped * weights, axis=2, dtype=jnp.uint8)

@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit the
+cell's step function (train_step / prefill_step / serve_step) against
+ShapeDtypeStruct inputs on the production meshes:
+
+  * single-pod: 16×16 = 256 chips, axes (data, model)
+  * multi-pod : 2×16×16 = 512 chips, axes (pod, data, model)
+
+For each cell we record ``memory_analysis()`` (fits/doesn't), and
+``cost_analysis()`` FLOPs/bytes + the collective bytes parsed from the
+post-SPMD HLO — the §Roofline inputs.
+
+NOTE the XLA_FLAGS line above MUST precede any jax import (device count
+locks at first init).  Do not import this module from tests.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, applicable_shapes
+from ..configs.base import ArchConfig, ShapeConfig
+from . import mesh as mesh_lib
+from .steps import (
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective bytes by op kind, from post-SPMD HLO text.
+
+    We take each collective's RESULT shape(s) (tuples included) as the
+    moved-bytes proxy: exact for all-reduce/permute/all-to-all, the
+    gathered size for all-gather (upper bound on per-chip traffic), the
+    input size is result×group for reduce-scatter (we use result — the
+    per-chip output actually landing in memory).
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        # `%name = <shape-or-tuple> <op>(` — op must start the instruction
+        m = re.search(r"=\s+(\(.*?\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")[\.\s(]", line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        total = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes)
+        )
+        out[op] += total
+        counts[op] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts, "total": sum(out[k] for k in _COLLECTIVES)}
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for the cell inputs
+# ---------------------------------------------------------------------------
+
+def cell_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh, specs: dict):
+    rules = mesh_lib.rules_for(cfg, shape, mesh)
+    pshard = mesh_lib.param_shardings(cfg, rules)
+    ba = mesh_lib.batch_axes(mesh)
+    repl = NamedSharding(mesh, P())
+
+    def batch_shard(name, leaf):
+        if leaf.ndim == 0:
+            return repl
+        if shape.global_batch == 1:          # long_500k: batch unshardable
+            return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+        return NamedSharding(mesh, P(ba, *(None,) * (leaf.ndim - 1)))
+
+    out = {"params": pshard}
+    if shape.kind == "train":
+        out["opt_state"] = {
+            "mu": pshard, "nu": pshard, "step": repl,
+        }
+        out["error_buf"] = pshard
+    if shape.is_decode:
+        out["cache"] = mesh_lib.cache_shardings(cfg, rules, specs["cache"])
+    out["batch"] = {
+        k: batch_shard(k, v) for k, v in specs["batch"].items()
+    }
+    return out, rules
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def scan_trip_count(cfg: ArchConfig) -> int:
+    """Iterations of the layer scan (trip-count correction factor)."""
+    if cfg.ssm == "mamba1" or cfg.family == "hybrid":
+        return cfg.n_layers
+    return cfg.n_layers - cfg.first_dense
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             collect_hlo: bool = True, correct_scan: bool = True,
+             overrides: dict | None = None,
+             mesh_shape: tuple | None = None) -> dict:
+    """``overrides``: ArchConfig field replacements for §Perf variants,
+    e.g. {"kv_dtype": "float8_e4m3fn"} or {"remat": False}.
+    ``mesh_shape``: alternative (data, model) geometry at 256 chips —
+    per-arch TP degree is a §Perf lever (e.g. (128, 2) for archs whose
+    head count doesn't divide 16)."""
+    import dataclasses
+
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if mesh_shape is not None:
+        assert not multi_pod
+        mesh = mesh_lib.make_mesh(tuple(mesh_shape), ("data", "model"))
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    shardings, rules = cell_shardings(cfg, shape, mesh, specs)
+
+    def build_step():
+        """Fresh closure each call — a reused function object would hit
+        jit's C++ cache and silently ignore the scan_unroll context."""
+        if shape.kind == "train":
+            s, _ = make_train_step(cfg, rules=rules, grad_compression=True)
+            return s
+        if shape.is_decode:
+            return make_serve_step(cfg, rules=rules)
+        return make_prefill_step(cfg, rules=rules)
+
+    step = build_step()
+    if shape.kind == "train":
+        args = (specs["params"], specs["opt_state"], specs["error_buf"],
+                specs["batch"])
+        in_sh = (shardings["params"], shardings["opt_state"],
+                 shardings["error_buf"], shardings["batch"])
+        out_sh = (shardings["params"], shardings["opt_state"],
+                  shardings["error_buf"], None)
+    elif shape.is_decode:
+        args = (specs["params"], specs["batch"], specs["cache"])
+        in_sh = (shardings["params"], shardings["batch"], shardings["cache"])
+        out_sh = (None, shardings["cache"])
+    else:
+        args = (specs["params"], specs["batch"])
+        in_sh = (shardings["params"], shardings["batch"])
+        out_sh = None
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+    }
+    # Donation matches the real launchers: train donates params/opt/err
+    # (train.py), serving donates the KV cache (in-place update) — without
+    # it the dry-run double-counts the cache in output+temp bytes.
+    donate = (0, 1, 2) if shape.kind == "train" else (
+        (2,) if shape.is_decode else ()
+    )
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        if "argument_size_in_bytes" in rec:
+            rec["device_bytes_total"] = (
+                rec.get("argument_size_in_bytes", 0)
+                + rec.get("temp_size_in_bytes", 0)
+            )
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        rec["hlo_transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+
+    if collect_hlo:
+        try:
+            txt = compiled.as_text()
+            rec["collectives"] = collective_bytes(txt)
+            rec["hlo_lines"] = txt.count("\n")
+        except Exception as e:  # pragma: no cover
+            rec["collective_error"] = str(e)
+
+    # --- scan trip-count correction (single-pod roofline cells only) --------
+    # HloCostAnalysis counts a while body ONCE; re-lower with the layer
+    # scan unrolled 2x — the delta is one extra body, so
+    #   true = reported + (L - 1) * body.
+    L = scan_trip_count(cfg)
+    rec["scan_trip_count"] = L
+    if correct_scan and not multi_pod and L > 1:
+        from ..models.model import scan_unroll
+
+        try:
+            with mesh, scan_unroll(2):
+                c2 = jax.jit(build_step(), in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=donate).lower(*args).compile()
+            ca2 = c2.cost_analysis()
+            if isinstance(ca2, list):
+                ca2 = ca2[0]
+            body_f = max(float(ca2.get("flops", 0.0)) - rec.get("hlo_flops", 0.0), 0.0)
+            body_b = max(float(ca2.get("bytes accessed", 0.0)) - rec.get("hlo_bytes", 0.0), 0.0)
+            rec["hlo_flops_corrected"] = rec.get("hlo_flops", 0.0) + (L - 1) * body_f
+            rec["hlo_bytes_corrected"] = rec.get("hlo_bytes", 0.0) + (L - 1) * body_b
+            if collect_hlo:
+                coll2 = collective_bytes(c2.as_text())
+                body_c = max(coll2["total"] - rec["collectives"]["total"], 0.0)
+                rec["collective_bytes_corrected"] = (
+                    rec["collectives"]["total"] + (L - 1) * body_c
+                )
+        except Exception as e:  # pragma: no cover
+            rec["scan_correction_error"] = str(e)
+    return rec
+
+
+def cells(archs=None):
+    for name in sorted(archs or ARCHS):
+        cfg = ARCHS[name]
+        for shape in applicable_shapes(cfg):
+            yield name, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override key=value (perf variants)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="data,model geometry at 256 chips (perf variants)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    todo = []
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        for a, s in cells():
+            for mp in meshes:
+                todo.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    results = []
+    for arch, shape, mp in todo:
+        label = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+        print(f"[dryrun] {label} ...", flush=True)
+        try:
+            ms = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+            rec = run_cell(arch, shape, mp, collect_hlo=not args.no_hlo,
+                           overrides=overrides or None, mesh_shape=ms)
+            rec["overrides"] = overrides
+            if ms:
+                rec["mesh"] = "x".join(str(x) for x in ms)
+            rec["ok"] = True
+            coll = rec.get("collectives", {}).get("total", 0)
+            print(
+                f"[dryrun]   ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                f"flops={rec.get('hlo_flops', 0):.3e} bytes={rec.get('hlo_bytes', 0):.3e} "
+                f"coll={coll:.3e}",
+                flush=True,
+            )
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun]   FAIL {type(e).__name__}: {e}", flush=True)
+        results.append(rec)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells compiled")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Step functions + abstract input specs for every (arch × shape) cell.
+
+``train_step``  — loss/grad + AdamW update (+ optional int8 gradient
+                  compression with error feedback for the cross-pod
+                  all-reduce).
+``serve_step``  — one decode token against a populated KV cache of
+                  ``seq_len`` (decode_* / long_* cells lower THIS, not
+                  train_step).
+``prefill_step``— full-prompt forward (prefill_* cells).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input — the
+dry-run lowers against these, so no memory is ever allocated for the full
+configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import decode_step, forward, init_cache, lm_loss
+from ..models.model import abstract_params, DTYPE
+from ..models.sharding import MeshRules, use_rules
+from ..optim import AdamWConfig, init as opt_init, update as opt_update
+from ..optim.grad_compress import compress_grads, init_error_feedback
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, ocfg: Optional[AdamWConfig] = None,
+                    rules: Optional[MeshRules] = None,
+                    grad_compression: bool = False):
+    ocfg = ocfg or AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16"
+        else jnp.float32
+    )
+
+    act = rules.act() if rules is not None else None
+
+    def train_step(params, opt_state, error_buf, batch):
+        with use_rules(act):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, batch)
+            )(params)
+            if grad_compression:
+                grads, error_buf = compress_grads(grads, error_buf)
+            params, opt_state, metrics = opt_update(
+                ocfg, grads, opt_state, params
+            )
+        return params, opt_state, error_buf, {"loss": loss, **metrics}
+
+    return train_step, ocfg
+
+
+def make_serve_step(cfg: ArchConfig, rules: Optional[MeshRules] = None):
+    act = rules.act() if rules is not None else None
+
+    def serve_step(params, batch, cache):
+        with use_rules(act):
+            return decode_step(cfg, params, batch, cache)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules: Optional[MeshRules] = None):
+    act = rules.act() if rules is not None else None
+
+    def prefill_step(params, batch):
+        with use_rules(act):
+            logits, _, _ = forward(cfg, params, batch)
+        return logits
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the host batch of one cell."""
+    B = shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if cfg.uses_tokens:
+        b = {"tokens": sd((B, S), jnp.int32)}
+    else:
+        # modality frontend stub: precomputed frame/patch embeddings
+        b = {"embeds": sd((B, S, cfg.d_model), jnp.bfloat16)}
+    if shape.kind == "train":
+        b["labels"] = sd((B, S), jnp.int32)
+    if shape.is_decode:
+        b["cache_pos"] = sd((), jnp.int32)
+    return b
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Abstract KV/SSM cache of ``seq_len`` capacity for decode cells."""
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    return cache
+
+
+def opt_specs(cfg: ArchConfig, ocfg: AdamWConfig) -> dict:
+    params = abstract_params(cfg)
+    return jax.eval_shape(functools.partial(opt_init, ocfg), params)
+
+
+def error_buf_specs(cfg: ArchConfig) -> dict:
+    return jax.eval_shape(init_error_feedback, abstract_params(cfg))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                ocfg: Optional[AdamWConfig] = None) -> dict:
+    """All abstract inputs for the cell's step function, keyed by arg name."""
+    params = abstract_params(cfg)
+    if shape.kind == "train":
+        ocfg = ocfg or AdamWConfig(
+            moment_dtype=jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16"
+            else jnp.float32
+        )
+        return {
+            "params": params,
+            "opt_state": opt_specs(cfg, ocfg),
+            "error_buf": error_buf_specs(cfg),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.is_decode:
+        return {
+            "params": params,
+            "batch": batch_specs(cfg, shape),
+            "cache": cache_specs(cfg, shape),
+        }
+    return {"params": params, "batch": batch_specs(cfg, shape)}

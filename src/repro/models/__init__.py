@@ -1,0 +1,5 @@
+from .model import (
+    schema, init_params, abstract_params, param_axes,
+    forward, lm_loss, prefill, decode_step, init_cache,
+)
+from . import layers, sharding

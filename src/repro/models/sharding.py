@@ -1,0 +1,108 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates tensors with *logical* axis names; the launcher
+installs a rule set mapping logical names → mesh axes for the current
+(arch × shape × mesh) cell.  On CPU smoke tests no rules are installed and
+annotations are no-ops, so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list["MeshRules"] = []
+
+
+class MeshRules:
+    """Mapping of logical axis name → mesh axis (or tuple, or None).
+
+    ``act_overrides`` is a per-cell patch applied by :meth:`act` — the
+    activation/cache view of the rules.  Canonical uses: params' FSDP
+    ``embed``→data rule must not bind activations (their batch dim owns
+    the data axis), and decode cells shard the KV cache's sequence axis
+    on the mesh axis that params use for kv_heads.
+    """
+
+    def __init__(self, mesh: Mesh, rules: dict, act_overrides: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.act_overrides = {"embed": None, **(act_overrides or {})}
+
+    def spec(self, axes: tuple) -> P:
+        out = []
+        for a in axes:
+            r = self.rules.get(a) if a is not None else None
+            out.append(r)
+        return P(*out)
+
+    def axis_size(self, rule) -> int:
+        """Product of mesh axis sizes a rule entry maps to."""
+        if rule is None:
+            return 1
+        names = rule if isinstance(rule, tuple) else (rule,)
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec_for_shape(self, axes: tuple, shape: tuple) -> P:
+        """Spec with non-dividing entries degraded: a tuple rule falls back
+        to its longest dividing prefix, a scalar rule to None (e.g. a
+        504-way vocab on a 16-way model axis stays replicated)."""
+        out = []
+        for a, d in zip(axes, shape):
+            r = self.rules.get(a) if a is not None else None
+            if r is not None:
+                cand = r if isinstance(r, tuple) else (r,)
+                while cand and d % self.axis_size(cand) != 0:
+                    cand = cand[:-1]
+                r = (cand if len(cand) > 1 else (cand[0] if cand else None))
+            out.append(r)
+        return P(*out)
+
+    def sharding(self, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    def sharding_for_shape(self, axes: tuple, shape: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for_shape(axes, shape))
+
+    def act(self) -> "MeshRules":
+        r = dict(self.rules)
+        r.update(self.act_overrides)
+        return MeshRules(self.mesh, r, {})
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    if rules is None:
+        yield
+        return
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def logical(x, *axes):
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    No-op when no rules are installed (CPU smoke tests) or when the rank
+    doesn't match (defensive: lets layers be reused across cache layouts).
+    Axes whose mesh extent doesn't divide the dim are dropped (replicated)
+    rather than erroring — e.g. a 504-way vocab on a 16-way model axis.
+    """
+    r = current_rules()
+    if r is None or x.ndim != len(axes):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, r.sharding_for_shape(axes, x.shape)
+    )

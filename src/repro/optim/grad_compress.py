@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Cross-pod gradient all-reduce is the dominant DCN traffic in multi-pod
+data parallelism.  We compress gradients to int8 (per-tensor max-scale)
+before the reduction and keep the quantisation residual in an error-
+feedback buffer so the compression is unbiased over time (Seide et al.,
+1-bit SGD lineage).  Under pjit the reduction itself is inserted by SPMD;
+quantise→dequantise around the loss-gradient boundary models the wire
+format while keeping the math explicit and testable.  Wire-byte savings
+(4x vs f32 / 2x vs bf16) are accounted in the roofline collective term.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def _quantize(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, error_buf):
+    """Apply error feedback, quantise to int8, return (dequantised grads,
+    new error buffer).  The dequantised grads are what the (SPMD-inserted)
+    all-reduce sees; the residual stays local."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), (g32 - deq).astype(jnp.bfloat16)
+
+    pairs = jax.tree.map(one, grads, error_buf)
+    deq = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def compressed_bytes(params) -> int:
+    """Wire bytes per all-reduce under int8 compression (+ scales)."""
+    return sum(p.size + 4 for p in jax.tree.leaves(params))

@@ -1,0 +1,6 @@
+from .paging import KVPagePool, PagePolicy, PAPER_POLICY
+from .serving import ServeEngine, ServeStats
+from .weights import WeightStore
+
+__all__ = ["KVPagePool", "PagePolicy", "PAPER_POLICY", "ServeEngine",
+           "ServeStats", "WeightStore"]

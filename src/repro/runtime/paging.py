@@ -1,0 +1,176 @@
+"""Paged KV management over an HBM + CXL(TRACE) tier (paper §II-C, Table II).
+
+KV is managed as fixed-size pages (a window of tokens for all channels of
+one layer's K or V).  Pages live in HBM while the hot budget lasts; the
+long tail spills to the offload tier (a ``core.tier`` device — Plain,
+GComp or TRACE).  Page *importance* is long-tailed, so spilled pages are
+assigned precision tiers, which a TRACE device serves with plane-aligned
+fetch (Mechanism II) — word devices must always move full containers
+(paper Issue 2).
+
+The shipped policy mirrors Table II's best row:
+    top pages   → BF16 (full, lossless)
+    next tier   → ~FP8  (man4 view + guard round: 1+8+4 visible bits)
+    cold tail   → ~FP4  (man0 view + guard round: sign+exp only)
+KV views keep the full (delta) exponent planes — they are the cheapest,
+most compressible planes — and scale mantissa planes only (precision.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.precision import FULL, MAN0, MAN4, PrecisionView
+from ..core.tier import BaseDevice, TraceDevice, make_device
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePolicy:
+    """Importance-ranked precision assignment for *spilled* pages."""
+
+    tiers: tuple = ((5, FULL), (3, MAN4), (2, MAN0))   # (count, view) in rank order
+    tail_view: PrecisionView = MAN0                     # beyond listed tiers
+
+    def view_for_rank(self, rank: int) -> PrecisionView:
+        acc = 0
+        for count, view in self.tiers:
+            acc += count
+            if rank < acc:
+                return view
+        return self.tail_view
+
+    def avg_bits(self, n_pages: int) -> float:
+        if n_pages == 0:
+            return 16.0
+        return float(
+            np.mean([self.view_for_rank(r).bits for r in range(n_pages)])
+        )
+
+
+PAPER_POLICY = PagePolicy()           # Table II: 5×BF16 / 3×FP8 / 2×FP4
+LOSSLESS_POLICY = PagePolicy(tiers=((1 << 30, FULL),), tail_view=FULL)
+
+
+@dataclasses.dataclass
+class _Page:
+    key: str                  # stream id on the device
+    layer: int
+    kind: str                 # "k" | "v"
+    start: int                # first token index
+    n_tokens: int
+    importance: float = 0.0
+    resident: Optional[np.ndarray] = None   # HBM copy (token-major u16) or None
+
+
+class KVPagePool:
+    """Per-sequence paged KV with HBM budget + tier spill.
+
+    Host arrays are BF16-as-uint16, token-major ``(tokens, channels)`` —
+    exactly the stream a real host would store through CXL.mem.
+    """
+
+    def __init__(
+        self,
+        device: BaseDevice | str = "trace",
+        page_tokens: int = 64,
+        hbm_budget_bytes: int = 1 << 30,
+        policy: PagePolicy = PAPER_POLICY,
+    ):
+        self.device = make_device(device) if isinstance(device, str) else device
+        self.page_tokens = page_tokens
+        self.hbm_budget = hbm_budget_bytes
+        self.policy = policy
+        self._pages: List[_Page] = []
+        self._hbm_used = 0
+        self.spill_events: List[_Page] = []   # drained by the serving engine
+        if isinstance(self.device, TraceDevice):
+            self.device.kv_window = page_tokens
+
+    # -- write path -----------------------------------------------------------
+    def append_page(self, layer: int, kind: str, start: int,
+                    tokens_u16: np.ndarray, importance: float = 0.0):
+        """Commit one full page (token-major (n, C) uint16)."""
+        key = f"L{layer}.{kind}.{start}"
+        page = _Page(key, layer, kind, start, tokens_u16.shape[0],
+                     importance=importance)
+        # Always admit to HBM first, then evict the least-important pages
+        # (possibly this one) — importance, not arrival order, decides
+        # residency (paper §II-C: importance is long-tailed).
+        page.resident = tokens_u16.copy()
+        self._hbm_used += tokens_u16.size * 2
+        self._pages.append(page)
+        self._rebalance()
+
+    def _spill(self, page: _Page, tokens_u16: np.ndarray):
+        self.device.write_kv(page.key, tokens_u16)
+        if isinstance(self.device, TraceDevice):
+            self.device.flush_kv(page.key)
+        page.resident = None
+        self.spill_events.append(page)
+
+    def _rebalance(self):
+        """Evict the least-important resident pages when over budget."""
+        if self._hbm_used <= self.hbm_budget:
+            return
+        resident = sorted(
+            (p for p in self._pages if p.resident is not None),
+            key=lambda p: p.importance,
+        )
+        for p in resident:
+            if self._hbm_used <= self.hbm_budget:
+                break
+            tok = p.resident
+            self._hbm_used -= tok.size * 2
+            self._spill(p, tok)
+
+    def update_importance(self, scores: Dict[str, float]):
+        for p in self._pages:
+            if p.key in scores:
+                p.importance = scores[p.key]
+        self._rebalance()
+
+    def read_page(self, page: _Page) -> np.ndarray:
+        """One spilled page through the tier at its current policy view."""
+        spilled = sorted(
+            (p for p in self._pages if p.resident is None),
+            key=lambda p: -p.importance,
+        )
+        rank = next(i for i, p in enumerate(spilled) if p.key == page.key)
+        return self.device.read_kv(page.key, self.policy.view_for_rank(rank))
+
+    # -- read path --------------------------------------------------------------
+    def read_layer(self, layer: int, kind: str) -> np.ndarray:
+        """Gather all pages of (layer, kind) in token order, applying the
+        precision policy to spilled pages (ranked by importance)."""
+        pages = sorted(
+            (p for p in self._pages if p.layer == layer and p.kind == kind),
+            key=lambda p: p.start,
+        )
+        spilled = sorted(
+            (p for p in pages if p.resident is None),
+            key=lambda p: -p.importance,
+        )
+        rank = {p.key: i for i, p in enumerate(spilled)}
+        out = []
+        for p in pages:
+            if p.resident is not None:
+                out.append(p.resident)
+            else:
+                view = self.policy.view_for_rank(rank[p.key])
+                out.append(self.device.read_kv(p.key, view))
+        return np.concatenate(out, axis=0) if out else np.empty((0, 0), np.uint16)
+
+    # -- accounting ---------------------------------------------------------------
+    @property
+    def hbm_bytes(self) -> int:
+        return self._hbm_used
+
+    @property
+    def spilled_pages(self) -> int:
+        return sum(1 for p in self._pages if p.resident is None)
+
+    def stats(self):
+        return self.device.stats

@@ -1,0 +1,94 @@
+"""Weight offload through the TRACE tier with elastic per-unit precision.
+
+The paper's second traffic stream (§IV-D): weights are re-read every
+decode step; when they spill past HBM, the tier serves them — and a
+TRACE device can serve each *unit* (expert / attention head / MLP
+neuron) at its runtime-assigned precision view via plane-aligned fetch
+(Granularity I/II), while word devices always move full containers.
+
+``WeightStore`` keeps the per-step accounting honest the same way the
+KV pool does: weights written once (bit-plane compressed on TRACE),
+``fetch`` returns the reconstructed tensor at the requested view and
+tallies device-DRAM/link bytes, so a serving loop can measure the
+traffic ratio between importance policies — the Fig. 18-21 experiment
+with real bytes instead of the structural model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from ..core.precision import FULL, MAN0, MAN2, MAN4, PrecisionView
+from ..core.tier import BaseDevice, make_device
+
+# Precision tiers by unit importance rank-fraction (Fig. 17-style mix).
+DEFAULT_TIERS = ((0.4, FULL), (0.3, MAN4), (0.2, MAN2), (0.1, MAN0))
+
+
+@dataclasses.dataclass
+class UnitMeta:
+    name: str
+    shape: tuple
+    importance: float
+
+
+class WeightStore:
+    """Unit-granular weight storage on a tier device.
+
+    Units are tensors the runtime fetches independently (an expert's FFN
+    matrices, one head's projections, ...).  Importance drives the view.
+    """
+
+    def __init__(self, device: BaseDevice | str = "trace",
+                 tiers=DEFAULT_TIERS):
+        self.device = make_device(device) if isinstance(device, str) else device
+        self.tiers = tiers
+        self._units: Dict[str, UnitMeta] = {}
+
+    # -- write once ------------------------------------------------------------
+    def put(self, name: str, w: np.ndarray, importance: float = 1.0):
+        import ml_dtypes
+
+        u16 = np.ascontiguousarray(w, dtype=ml_dtypes.bfloat16).view(np.uint16)
+        self.device.write_tensor(name, u16)
+        self._units[name] = UnitMeta(name, w.shape, importance)
+
+    def set_importance(self, scores: Dict[str, float]):
+        for k, v in scores.items():
+            if k in self._units:
+                self._units[k].importance = v
+
+    # -- view assignment --------------------------------------------------------
+    def view_for(self, name: str) -> PrecisionView:
+        ranked = sorted(self._units.values(), key=lambda u: -u.importance)
+        idx = next(i for i, u in enumerate(ranked) if u.name == name)
+        frac = (idx + 0.5) / max(len(ranked), 1)
+        acc = 0.0
+        for width, view in self.tiers:
+            acc += width
+            if frac <= acc:
+                return view
+        return self.tiers[-1][1]
+
+    # -- read per step ------------------------------------------------------------
+    def fetch(self, name: str, view: PrecisionView | None = None) -> np.ndarray:
+        import ml_dtypes
+
+        view = view or self.view_for(name)
+        u16 = self.device.read_tensor(name, view)
+        return u16.view(ml_dtypes.bfloat16).reshape(self._units[name].shape)
+
+    def fetch_all(self) -> Dict[str, np.ndarray]:
+        return {n: self.fetch(n) for n in self._units}
+
+    # -- accounting ----------------------------------------------------------------
+    @property
+    def stats(self):
+        return self.device.stats
+
+    def avg_bits(self) -> float:
+        views = [self.view_for(n) for n in self._units]
+        return float(np.mean([v.bits for v in views])) if views else 16.0

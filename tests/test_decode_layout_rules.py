@@ -1,0 +1,25 @@
+"""decode_layout rules: batch_dp vs replicated (§Perf cell 4 lever)."""
+
+import dataclasses
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import mesh as mesh_lib
+
+
+def test_replicated_decode_layout_rules():
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    base = ARCHS["nemotron-4-340b"]
+    assert base.decode_layout == "batch_dp"
+    r_dp = mesh_lib.rules_for(base, SHAPES["decode_32k"], mesh)
+    assert r_dp.rules["batch"] == ("data",)
+    assert r_dp.rules["kv_seq"] == "model"
+
+    repl = dataclasses.replace(base, decode_layout="replicated")
+    r_re = mesh_lib.rules_for(repl, SHAPES["decode_32k"], mesh)
+    assert r_re.rules["batch"] is None               # batch replicated
+    assert r_re.rules["kv_seq"] == ("data", "model")  # cache over both axes
+    assert r_re.rules["embed"] == "data"             # weights stay 2D
+
+    # train cells are unaffected by the decode layout
+    r_tr = mesh_lib.rules_for(repl, SHAPES["train_4k"], mesh)
+    assert r_tr.rules["batch"] == ("data",)

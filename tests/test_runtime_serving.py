@@ -1,0 +1,96 @@
+"""Serving runtime: paged KV spill → tier round-trip → decode integrity."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.core.precision import FULL
+from repro.models.model import init_params
+from repro.runtime import PAPER_POLICY, KVPagePool, ServeEngine
+from repro.runtime.paging import LOSSLESS_POLICY, PagePolicy
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    """Two engines, lossless-TRACE vs plain, same params/prompt."""
+    cfg = smoke_config(ARCHS["qwen2-0.5b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, device, policy, n=12, budget=1 << 12):
+    eng = ServeEngine(
+        cfg, params, max_seq=96, batch=1, page_tokens=16,
+        hbm_kv_budget=budget, device_kind=device, policy=policy,
+    )
+    prompt = np.arange(48, dtype=np.int32).reshape(1, 48) % cfg.vocab
+    toks = eng.generate(prompt, n)
+    return eng, toks
+
+
+def test_lossless_trace_matches_plain_generation(engine_pair):
+    """Byte-exact KV round-trip ⇒ identical greedy generations (the paper's
+    §III-D correctness invariant, end to end)."""
+    cfg, params = engine_pair
+    _, t_plain = _run(cfg, params, "plain", LOSSLESS_POLICY)
+    _, t_trace = _run(cfg, params, "trace", LOSSLESS_POLICY)
+    np.testing.assert_array_equal(t_plain, t_trace)
+
+
+def test_spill_and_compression_happen(engine_pair):
+    cfg, params = engine_pair
+    eng, _ = _run(cfg, params, "trace", LOSSLESS_POLICY)
+    s = eng.stats()
+    assert s.spilled_pages > 0
+    assert s.tier_dram_read > 0
+    assert s.kv_compression_ratio > 1.05  # bit-plane + lz4 on real KV
+
+
+def test_policy_views_reduce_dram_reads(engine_pair):
+    cfg, params = engine_pair
+    e_full, _ = _run(cfg, params, "trace", LOSSLESS_POLICY)
+    e_pol, _ = _run(cfg, params, "trace", PAPER_POLICY)
+    # elastic policy fetches fewer planes for cold pages
+    assert e_pol.stats().tier_dram_read < e_full.stats().tier_dram_read
+
+
+def test_policy_generation_stays_sane(engine_pair):
+    """Reduced-precision cold pages must not derail generation (tokens in
+    vocab, no crash); quality deltas are measured in benchmarks."""
+    cfg, params = engine_pair
+    _, toks = _run(cfg, params, "trace", PAPER_POLICY)
+    assert toks.min() >= 0 and toks.max() < cfg.vocab
+
+
+def test_kv_through_tier_roundtrip(engine_pair):
+    cfg, params = engine_pair
+    eng, _ = _run(cfg, params, "trace", LOSSLESS_POLICY)
+    kv = eng.kv_through_tier(0, "k")
+    assert kv.size > 0 and kv.dtype == np.uint16
+
+
+def test_page_pool_importance_eviction():
+    pool = KVPagePool("trace", page_tokens=8, hbm_budget_bytes=8 * 64 * 2 * 2)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        page = rng.normal(size=(8, 64)).astype(np.float32)
+        import ml_dtypes
+
+        u16 = page.astype(ml_dtypes.bfloat16).view(np.uint16)
+        pool.append_page(0, "k", i * 8, u16, importance=float(i))
+    # low-importance pages must have spilled first
+    resident = [p.start for p in pool._pages if p.resident is not None]
+    spilled = [p.start for p in pool._pages if p.resident is None]
+    assert len(spilled) == 4 and max(spilled) < min(resident)
+    out = pool.read_layer(0, "k")
+    assert out.shape == (48, 64)
+
+
+def test_policy_rank_views():
+    pol = PagePolicy()
+    views = [pol.view_for_rank(r).name for r in range(12)]
+    assert views[:5] == ["bf16"] * 5
+    assert views[5:8] == ["man4"] * 3
+    assert views[8:] == ["man0"] * 4
+    assert pol.avg_bits(10) == (5 * 16 + 3 * 13 + 2 * 9) / 10

@@ -1,0 +1,86 @@
+"""Throughput / controller / DRAM model unit tests vs published anchors."""
+
+import numpy as np
+import pytest
+
+from repro.core.controller import load_to_use_cycles
+from repro.core.dram_model import (
+    EXPERT, HEAD, NEURON, energy_per_weight_pj, mixture_for_target,
+)
+from repro.core.system_model import (
+    PAPER_ANCHORS_FIG12, gpt_oss_120b, sweep_alpha, throughput,
+)
+
+
+def test_fig12_anchors_within_tolerance():
+    """Mean relative error over the 8 published Fig-12 points < 15 %.
+    The loosest single point is TRACE@256k (our constant-elastic model
+    over-credits the deep-spill tail; see EXPERIMENTS.md §Validation)."""
+    m = gpt_oss_120b("mxfp4")
+    errs = []
+    for design, anchors in PAPER_ANCHORS_FIG12.items():
+        for ctx, want in anchors.items():
+            got = throughput(m, ctx, design).tok_s
+            errs.append(abs(got - want) / want)
+    assert float(np.mean(errs)) < 0.15, errs
+
+
+def test_gcomp_useless_on_kv_bound_regime():
+    m = gpt_oss_120b("mxfp4")
+    p = throughput(m, 131072, "plain").tok_s
+    g = throughput(m, 131072, "gcomp").tok_s
+    assert g / p < 1.1  # paper: curves overlap
+
+
+def test_trace_dominates_all_contexts():
+    m = gpt_oss_120b("bf16")
+    for ctx in (4096, 65536, 131072, 262144):
+        t = throughput(m, ctx, "trace", alpha=0.8).tok_s
+        p = throughput(m, ctx, "plain", alpha=0.8).tok_s
+        assert t >= p
+
+
+def test_alpha_sweep_unimodal_and_trace_peak_higher():
+    m = gpt_oss_120b("bf16")
+    alphas = list(np.linspace(0.1, 0.95, 18))
+    sw = sweep_alpha(m, 131072, alphas)
+    for design, ys in sw.items():
+        arr = np.round(np.array(ys), 9)
+        d = np.sign(np.diff(arr))
+        d = d[d != 0]
+        assert np.sum(np.abs(np.diff(d))) <= 2, design  # ≤1 direction change
+    assert max(sw["trace"]) > max(sw["gcomp"]) > max(sw["plain"])
+
+
+def test_controller_anchor_cycles():
+    assert load_to_use_cycles("plain") == 71
+    assert load_to_use_cycles("gcomp") == 84
+    assert load_to_use_cycles("trace") == 89
+    assert load_to_use_cycles("trace", comp_ratio=3.0) == 85
+    assert load_to_use_cycles("trace", bypass=True) == 76
+    assert load_to_use_cycles("trace", meta_hit=False) > 89
+
+
+def test_mixture_hits_target_mean():
+    for target in (1.6, 4.8, 8.0, 12.0):
+        mix = mixture_for_target(target)
+        mean = sum(b * f for b, f in mix.items())
+        assert mean == pytest.approx(target, rel=0.02)
+
+
+def test_plane_fetch_beats_word_fetch_everywhere():
+    for unit in (EXPERT, HEAD, NEURON):
+        for bits in (1.6, 4.8, 8.0):
+            e_p = energy_per_weight_pj(unit, bits, "plain")
+            e_t = energy_per_weight_pj(unit, bits, "trace")
+            assert e_t < e_p, (unit.name, bits)
+
+
+def test_neuron_savings_below_head_savings():
+    """Paper: fine-grained units pay stripe-gap activations."""
+    for bits in (4.8, 8.0):
+        s_head = 1 - (energy_per_weight_pj(HEAD, bits, "trace")
+                      / energy_per_weight_pj(HEAD, bits, "plain"))
+        s_neu = 1 - (energy_per_weight_pj(NEURON, bits, "trace")
+                     / energy_per_weight_pj(NEURON, bits, "plain"))
+        assert s_neu < s_head + 1e-9

@@ -1,0 +1,72 @@
+"""Elastic weight offload (runtime/weights.py) — Granularity I/II live."""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.runtime import WeightStore
+from repro.core.precision import FULL
+
+
+def _units(n=10, sz=(64, 128), seed=0):
+    import ml_dtypes
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n):
+        w = synth.weights(sz[0] * sz[1], "bf16", seed=seed + i)
+        out[f"expert{i}"] = (
+            w.view(ml_dtypes.bfloat16).reshape(sz), float(n - i)
+        )
+    return out
+
+
+def test_full_view_byte_exact_roundtrip():
+    ws = WeightStore("trace", tiers=((1.0, FULL),))
+    units = _units(4)
+    for name, (w, imp) in units.items():
+        ws.put(name, w, imp)
+    for name, (w, _) in units.items():
+        np.testing.assert_array_equal(
+            ws.fetch(name).view(np.uint16), np.asarray(w).view(np.uint16)
+        )
+
+
+def test_importance_ranked_views_scale_traffic():
+    """Cold units must cost fewer DRAM bytes than hot ones (plane fetch)."""
+    ws = WeightStore("trace")
+    for name, (w, imp) in _units(10).items():
+        ws.put(name, w, imp)
+    # hottest unit = full view, coldest = man0
+    assert ws.view_for("expert0").name == "bf16"
+    assert ws.view_for("expert9").name == "man0"
+
+    ws.stats.reset_traffic()
+    ws.fetch("expert0")
+    hot = ws.stats.dram_bytes_read
+    ws.stats.reset_traffic()
+    ws.fetch("expert9")
+    cold = ws.stats.dram_bytes_read
+    assert cold < hot * 0.85
+    assert 9 <= ws.avg_bits() < 16
+
+
+def test_word_device_cannot_scale_traffic():
+    """CXL-Plain always moves full containers (paper Issue 2)."""
+    tr = WeightStore("trace")
+    pl = WeightStore("plain")
+    for store in (tr, pl):
+        for name, (w, imp) in _units(10, seed=3).items():
+            store.put(name, w, imp)
+        store.stats.reset_traffic()
+        store.fetch_all()
+    assert tr.stats.dram_bytes_read < 0.8 * pl.stats.dram_bytes_read
+
+
+def test_importance_update_changes_views():
+    ws = WeightStore("trace")
+    for name, (w, imp) in _units(10).items():
+        ws.put(name, w, imp)
+    assert ws.view_for("expert9").name == "man0"
+    ws.set_importance({"expert9": 100.0})
+    assert ws.view_for("expert9").name == "bf16"
