@@ -52,9 +52,12 @@ def run():
 
     base, eng_b = _logits(LOSSLESS_POLICY, params, cfg)
     rows = {}
+    eng_m = None
     for name, pol in (("paper_mixed", PAPER), ("truncate_only", TRUNC),
                       ("all_man0", ALL_MAN0)):
         got, eng = _logits(pol, params, cfg)
+        if name == "paper_mixed":
+            eng_m = eng
         mse = float(np.mean((got - base) ** 2))
         top1 = float(np.mean(got.argmax(-1) == base.argmax(-1)))
         dram = eng.stats().tier_dram_read
@@ -63,6 +66,20 @@ def run():
         emit("table2", f"{name}_top1_agreement", top1 * 100, "%")
         emit("table2", f"{name}_tier_dram_read", dram, "B")
     emit("table2", "lossless_tier_dram_read", eng_b.stats().tier_dram_read, "B")
+
+    # Per-request receipts attribute tier traffic per layer (not one
+    # global counter): report the hottest/coldest layer for the paper mix.
+    per_layer = {
+        layer: t.dram_bytes_read + t.dram_bytes_written
+        for layer, t in eng_m.layer_traffic().items()
+    }
+    if per_layer:
+        emit("table2", "paper_mixed_layers_attributed", len(per_layer), "",
+             "layers with receipt-attributed tier traffic")
+        emit("table2", "paper_mixed_max_layer_dram",
+             max(per_layer.values()), "B")
+        emit("table2", "paper_mixed_min_layer_dram",
+             min(per_layer.values()), "B")
 
     # paper's ordering: guard-rounded mixed ≻ truncation at same planes;
     # both ≻ uniformly aggressive

@@ -8,22 +8,22 @@ import ml_dtypes
 
 from repro.core import synth
 from repro.core.precision import MAN4, VIEWS
-from repro.core.tier import make_device
+from repro.core.tier import KV, ReadReq, WriteReq, make_device
 
 # --- a KV block with LLM-like structure (smooth channels, mixed scales) ----
 kv = synth.kv_cache(n_tokens=512, n_channels=256, seed=0)   # (512, 256) u16
 
 # --- Mechanism I: why the layout matters ------------------------------------
-plain = make_device("plain")    # word-major, no compression
-gcomp = make_device("gcomp")    # word-major + inline LZ4 (4 KB blocks)
-trace = make_device("trace")    # bit-plane + KV transform + same LZ4
+# Devices are TierStore configurations: a layout strategy + a codec behind
+# the same batched request API.
+plain = make_device("plain")    # word layout, no compression
+gcomp = make_device("gcomp")    # word layout + inline LZ4 (4 KB blocks)
+trace = make_device("trace")    # bit-plane layout + KV transform + same LZ4
 
 for dev in (plain, gcomp, trace):
-    dev.write_kv("kv", kv)
-    if hasattr(dev, "flush_kv"):
-        dev.flush_kv("kv")
-    print(f"{dev.name:>6}: stored {dev.stats.dram_bytes_stored:7d} B "
-          f"for {dev.stats.raw_bytes_stored} B logical "
+    rec, = dev.submit([WriteReq("kv", kv, kind=KV)])
+    print(f"{dev.name:>6}: stored {rec.dram_bytes_stored:7d} B "
+          f"for {rec.raw_bytes_stored} B logical "
           f"(ratio {dev.stats.compression_ratio:.2f}x)")
 
 # byte-exact round trip (the paper's correctness invariant)
@@ -32,12 +32,13 @@ np.testing.assert_array_equal(out, kv)
 print("lossless round-trip: OK")
 
 # --- Mechanism II: precision-proportional fetch ------------------------------
-trace.stats.reset_traffic()
-full = trace.read_kv("kv")                       # all 16 planes
-full_bytes = trace.stats.dram_bytes_read
-trace.stats.reset_traffic()
-low = trace.read_kv("kv", VIEWS["man4"])         # sign+exp+4 mantissa (+guard)
-low_bytes = trace.stats.dram_bytes_read
+# One batched submit; each receipt carries that request's traffic.
+full_rec, low_rec = trace.submit([
+    ReadReq("kv", kind=KV),                      # all 16 planes
+    ReadReq("kv", kind=KV, view=VIEWS["man4"]),  # sign+exp+4 mantissa (+guard)
+])
+full, low = full_rec.data, low_rec.data
+full_bytes, low_bytes = full_rec.dram_bytes_read, low_rec.dram_bytes_read
 print(f"full-precision read: {full_bytes} B DRAM; "
       f"man4 view: {low_bytes} B ({low_bytes / full_bytes:.0%})")
 

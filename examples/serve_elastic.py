@@ -36,6 +36,7 @@ def main():
     follow = rng.integers(0, cfg.vocab, (24, 1, 1)).astype(np.int32)
 
     results = {}
+    last_eng = None
     for name, pol in POLICIES.items():
         eng = ServeEngine(
             cfg, params, max_seq=160, batch=1, page_tokens=16,
@@ -45,6 +46,7 @@ def main():
         for t in follow:                      # teacher-forced comparison
             logits.append(eng.decode(t))
         results[name] = (np.stack(logits), eng.stats())
+        last_eng = eng
 
     base = results["lossless (all BF16)"][0]
     print(f"{'policy':45s} {'logit MSE':>10s} {'top1 agree':>10s} "
@@ -53,6 +55,13 @@ def main():
         mse = float(np.mean((lg - base) ** 2))
         top1 = float(np.mean(lg.argmax(-1) == base.argmax(-1)))
         print(f"{name:45s} {mse:10.4f} {top1:10.2%} {st.tier_dram_read:12d} B")
+
+    # Receipts attribute tier traffic per layer — no global-counter diffing.
+    print("\nper-layer tier DRAM traffic (aggressive policy, from receipts):")
+    for layer, t in sorted(last_eng.layer_traffic().items()):
+        print(f"  layer {layer}: read {t.dram_bytes_read:9d} B  "
+              f"written {t.dram_bytes_written:9d} B  "
+              f"({t.requests} requests)")
 
 
 if __name__ == "__main__":

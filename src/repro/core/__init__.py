@@ -4,11 +4,21 @@ codecs, device models, and the paper's analytic system models."""
 from . import bitplane, codec, controller, dram_model, kv_transform, precision
 from . import system_model, tier
 from .precision import PrecisionView, FULL, MAN4, MAN2, MAN0, VIEWS
-from .tier import PlainDevice, GCompDevice, TraceDevice, make_device
+from .tier import (
+    GCompDevice,
+    PlainDevice,
+    ReadReq,
+    Receipt,
+    TierStore,
+    TraceDevice,
+    WriteReq,
+    make_device,
+)
 
 __all__ = [
     "bitplane", "codec", "controller", "dram_model", "kv_transform",
     "precision", "system_model", "tier",
     "PrecisionView", "FULL", "MAN4", "MAN2", "MAN0", "VIEWS",
-    "PlainDevice", "GCompDevice", "TraceDevice", "make_device",
+    "PlainDevice", "GCompDevice", "TraceDevice", "TierStore", "make_device",
+    "WriteReq", "ReadReq", "Receipt",
 ]

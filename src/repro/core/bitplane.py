@@ -90,6 +90,23 @@ def plane_bytes(n_elems: int) -> int:
     return (n_elems + 7) // 8
 
 
+def unpack_planes_subset(rows: np.ndarray, plane_idx, n_elems: int) -> np.ndarray:
+    """Unpack only the planes in ``plane_idx`` (absent planes read as zero).
+
+    ``rows`` is a ``(len(plane_idx), nbytes) uint8`` matrix whose i-th row is
+    the packed stream of plane ``plane_idx[i]``.  Batched reads use this to
+    skip the all-zero rows a full 16-plane unpack would grind through when a
+    precision view fetches only a subset of planes.  Accumulates plane by
+    plane so temporaries stay one-plane-sized (cache-resident even for
+    multi-megabyte batches).
+    """
+    out = np.zeros(n_elems, dtype=np.uint16)
+    for i, p in enumerate(plane_idx):
+        bits = np.unpackbits(rows[i], count=n_elems)
+        out |= bits.astype(np.uint16) << np.uint16(p)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # jnp pack / unpack (oracle for the Pallas kernels; also used in serving)
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ block is incompressible the device stores it raw and marks the index entry
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, Tuple
 
 import numpy as np
@@ -28,6 +29,8 @@ try:
     _ZSTD_D = _zstd.ZstdDecompressor()
 except Exception:  # pragma: no cover
     _zstd = None
+
+HAVE_ZSTD = _zstd is not None
 
 _HASH_LOG = 13
 _HASH_SIZE = 1 << _HASH_LOG
@@ -142,8 +145,15 @@ def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
                 if b != 255:
                     break
         start = len(out) - offset
-        for k in range(mlen):  # may overlap — must copy byte-wise
-            out.append(out[start + k])
+        if offset >= mlen:
+            # disjoint source range — one slice copy
+            out += out[start : start + mlen]
+        else:
+            # overlapping match = repeating pattern of period `offset`
+            # (offset 1 is a byte run — the common case on zero-heavy
+            # planes); replicate at C speed instead of a python loop
+            pattern = bytes(out[start:])
+            out += (pattern * (mlen // offset + 1))[:mlen]
         if max_out is not None and len(out) > max_out:
             raise ValueError("decompressed size exceeds bound")
     return bytes(out)
@@ -160,6 +170,8 @@ def zstd_compress(data: bytes) -> bytes:
 
 
 def zstd_decompress(data: bytes, max_out: int | None = None) -> bytes:
+    if _zstd is None:  # pragma: no cover
+        raise RuntimeError("zstandard not available")
     return _ZSTD_D.decompress(data, max_output_size=max_out or 0)
 
 
@@ -169,9 +181,36 @@ def zstd_decompress(data: bytes, max_out: int | None = None) -> bytes:
 
 CODECS: Dict[str, Tuple[Callable[[bytes], bytes], Callable[..., bytes]]] = {
     "lz4": (lz4_compress, lz4_decompress),
-    "zstd": (zstd_compress, zstd_decompress),
     "none": (lambda b: b, lambda b, max_out=None: b),
 }
+if HAVE_ZSTD:
+    CODECS["zstd"] = (zstd_compress, zstd_decompress)
+
+_warned_fallback = False
+
+
+def resolve_codec(name: str) -> str:
+    """Map a requested codec to an available one.
+
+    ``zstd`` silently degrades to ``lz4`` (with a one-time warning) when the
+    ``zstandard`` package is missing, so device models stay usable in minimal
+    environments; tests that depend on zstd-specific ratios should check
+    :data:`HAVE_ZSTD` and skip instead.
+    """
+    global _warned_fallback
+    if name in CODECS:
+        return name
+    if name == "zstd":
+        if not _warned_fallback:
+            warnings.warn(
+                "zstandard is not installed; falling back to the built-in "
+                "lz4 codec for all 'zstd' devices",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            _warned_fallback = True
+        return "lz4"
+    raise KeyError(f"unknown codec {name!r}; registered: {sorted(CODECS)}")
 
 RAW, COMPRESSED = 0, 1
 
@@ -181,7 +220,7 @@ def compress_block(data: bytes, codec: str) -> tuple[bytes, int]:
 
     Returns ``(payload, flag)`` with flag ∈ {RAW, COMPRESSED}.
     """
-    c, _ = CODECS[codec]
+    c, _ = CODECS[resolve_codec(codec)]
     comp = c(data)
     if len(comp) >= len(data):
         return data, RAW
@@ -191,7 +230,7 @@ def compress_block(data: bytes, codec: str) -> tuple[bytes, int]:
 def decompress_block(payload: bytes, flag: int, codec: str, orig_len: int) -> bytes:
     if flag == RAW:
         return payload
-    _, d = CODECS[codec]
+    _, d = CODECS[resolve_codec(codec)]
     out = d(payload, max_out=orig_len)
     return out
 

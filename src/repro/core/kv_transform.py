@@ -107,6 +107,25 @@ def kv_inverse(stream_u16: np.ndarray, meta: KVBlockMeta) -> np.ndarray:
     return np.ascontiguousarray(out.T)
 
 
+def kv_inverse_batch(streams: np.ndarray, metas: list) -> np.ndarray:
+    """Vectorized :func:`kv_inverse` over same-shape windows.
+
+    ``streams``: ``(B, n*C)`` uint16, one transformed window per row;
+    ``metas``: B :class:`KVBlockMeta` with identical ``(n_tokens,
+    n_channels)``.  Returns token-major ``(B, n, C)`` uint16.  Batched
+    device reads use this to invert a whole request batch in two numpy
+    passes instead of one python call per 4 KB block.
+    """
+    C, n = metas[0].n_channels, metas[0].n_tokens
+    cm = streams.reshape(len(metas), C, n)
+    beta = np.stack([m.beta for m in metas])          # (B, C)
+    z = ((cm & _EXP_MASK) >> EXP_LO).astype(np.uint8)
+    delta = _unzigzag_u8(z)
+    exp = (delta.astype(np.int16) + beta[:, :, None].astype(np.int16)) % 256
+    out = (cm & _REST_MASK) | (exp.astype(np.uint16) << EXP_LO)
+    return np.ascontiguousarray(out.transpose(0, 2, 1))
+
+
 def kv_pack(block_u16: np.ndarray) -> tuple[np.ndarray, KVBlockMeta]:
     """Full Mechanism-I chain: transform then bit-plane pack (Fig. 8)."""
     stream, meta = kv_forward(block_u16)

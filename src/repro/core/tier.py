@@ -1,14 +1,29 @@
-"""CXL Type-3 device models — Plain / GComp / TRACE (paper Table III).
+"""Request-batched CXL Type-3 tier store — Plain / GComp / TRACE (Table III).
 
-These are functional + traffic models of the device-internal pipeline.
-All three expose the same host-visible semantics (byte-exact tensors per
-view); they differ only in the device-internal representation and hence in
-the bytes stored in device DRAM and moved per access — exactly the paper's
-correctness invariant (§III-D).
+The paper's central claim is that the *device-internal representation*
+(word-major vs channel-major bit-plane) is swappable behind an unmodified
+CXL.mem interface.  This module makes that boundary explicit:
 
-On TPU systems the "CXL tier" maps to host DRAM behind PCIe used for KV /
-weight offload; the device model therefore doubles as the offload-tier
-backend of the serving runtime (runtime/serving.py).
+* hosts speak **typed requests** — :class:`WriteReq` / :class:`ReadReq`
+  descriptors that name a key, a payload kind (``tensor`` or ``kv``
+  stream), a precision view and an optional block range;
+* the device answers with **per-request receipts** — :class:`Receipt`
+  carries the DRAM / link / index traffic and a first-order latency
+  estimate for exactly that request, so traffic attribution is per-page /
+  per-layer instead of one global counter blob (``DeviceStats`` remains as
+  the running aggregate of all receipts);
+* the internal representation is a **layout strategy** —
+  :class:`WordLayout` (raw words), :class:`WordLayout` + codec (GComp's
+  inline 4 KB block compression) or :class:`BitplaneLayout` (TRACE's
+  bit-plane substrate, optionally with the cross-token KV transform of
+  Fig. 8) — composed with the codec registry.  ``PlainDevice`` /
+  ``GCompDevice`` / ``TraceDevice`` are thin :class:`TierStore`
+  configurations kept for compatibility.
+
+Batched submission is also a performance feature: a read batch's blocks
+are grouped by fetched plane-set and decoded in vectorized numpy passes —
+one plane-unpack and one reconstruction call per group, not per 4 KB
+block (see ``BitplaneLayout.decode_batch``).
 
 Accounting conventions (per read):
   * ``dram_bytes``  — bytes the device DRAM actually serves (compressed
@@ -17,12 +32,17 @@ Accounting conventions (per read):
   * ``link_bytes``  — host-visible payload returned over CXL.mem (the
     reconstructed view; controller-side decompression per Fig. 11).
   * ``index_bytes`` — metadata traffic (64 B/entry on an index-cache miss).
+
+Legacy shims (``write_tensor`` / ``read_tensor`` / ``write_kv`` /
+``read_kv`` / ``flush_kv``) forward to :meth:`TierStore.submit` and are
+kept so existing call sites keep working; new code should submit request
+batches directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,17 +52,111 @@ from .bitplane import (
     BLOCK_ELEMS,
     iter_blocks,
     pack_planes,
-    plane_bytes,
-    unpack_planes,
+    unpack_planes_subset,
 )
-from .kv_transform import KVBlockMeta, kv_inverse, kv_forward
-from .precision import EXP_BITS, MAN_BITS, PrecisionView, FULL, reconstruct_u16
+from .kv_transform import KVBlockMeta, kv_forward, kv_inverse_batch
+from .precision import EXP_BITS, PrecisionView, FULL, reconstruct_u16
 
 INDEX_ENTRY_BYTES = 64  # paper §III-D: one compact entry per 4 KB block
+
+# Request payload kinds.
+TENSOR = "tensor"
+KV = "kv"
+
+
+# ---------------------------------------------------------------------------
+# Typed requests + receipts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WriteReq:
+    """Host→device write descriptor.
+
+    ``kind=TENSOR``: ``data`` is any-shape uint16; stored block-by-block.
+    ``kind=KV``: ``data`` is token-major ``(t, C)`` uint16 rows appended to
+    the stream ``key``; full windows are committed as they fill and
+    ``flush=True`` commits any partial window at the end of the request.
+    """
+
+    key: str
+    data: np.ndarray
+    kind: str = TENSOR
+    flush: bool = True
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadReq:
+    """Device→host read descriptor.
+
+    ``view`` selects the precision alias (plane-aligned fetch on bit-plane
+    layouts; word layouts always move full containers and reconstruct
+    host-side).  ``block_range=(lo, hi)`` restricts the read to that slice
+    of the key's block list; ranged tensor reads return flat uint16.
+    """
+
+    key: str
+    kind: str = TENSOR
+    view: PrecisionView = FULL
+    block_range: Optional[Tuple[int, int]] = None
+    tag: str = ""
+
+
+Request = Union[WriteReq, ReadReq]
+
+
+@dataclasses.dataclass
+class Receipt:
+    """Per-request traffic + latency accounting (and data, for reads).
+
+    Field names mirror :class:`DeviceStats`; summing any field across the
+    receipts of a session reproduces the corresponding aggregate delta
+    exactly — this is tested.
+    """
+
+    key: str
+    op: str                       # "write" | "read"
+    kind: str = TENSOR
+    tag: str = ""
+    blocks: int = 0
+    dram_bytes_read: int = 0
+    dram_bytes_written: int = 0
+    dram_bytes_stored: int = 0    # capacity delta (writes)
+    raw_bytes_stored: int = 0     # logical (uncompressed) delta (writes)
+    link_bytes_in: int = 0
+    link_bytes_out: int = 0
+    index_bytes: int = 0
+    index_hits: int = 0
+    index_misses: int = 0
+    latency_s: float = 0.0
+    data: Optional[np.ndarray] = None
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.dram_bytes_read + self.dram_bytes_written
+
+    @property
+    def link_bytes(self) -> int:
+        return self.link_bytes_in + self.link_bytes_out
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """First-order service-time model for a receipt (paper §IV-B numbers)."""
+
+    ddr_bw: float = 256e9         # device-side DDR
+    link_bw: float = 512e9        # CXL.mem per direction
+    base_s: float = 1e-6          # fixed request overhead
+
+    def latency(self, dram_bytes: int, link_bytes: int) -> float:
+        return self.base_s + max(dram_bytes / self.ddr_bw,
+                                 link_bytes / self.link_bw)
 
 
 @dataclasses.dataclass
 class DeviceStats:
+    """Running aggregate of every receipt the store has issued."""
+
     dram_bytes_stored: int = 0      # capacity footprint (compressed)
     dram_bytes_read: int = 0
     dram_bytes_written: int = 0
@@ -62,6 +176,18 @@ class DeviceStats:
         self.index_bytes = 0
         self.index_hits = self.index_misses = 0
 
+    def apply(self, r: Receipt):
+        self.dram_bytes_read += r.dram_bytes_read
+        self.dram_bytes_written += r.dram_bytes_written
+        self.dram_bytes_stored += r.dram_bytes_stored
+        self.raw_bytes_stored += r.raw_bytes_stored
+        self.link_bytes_in += r.link_bytes_in
+        self.link_bytes_out += r.link_bytes_out
+        self.index_bytes += r.index_bytes
+        self.index_hits += r.index_hits
+        self.index_misses += r.index_misses
+        self.blocks += r.blocks
+
     @property
     def compression_ratio(self) -> float:
         return self.raw_bytes_stored / max(self.dram_bytes_stored, 1)
@@ -71,9 +197,10 @@ class DeviceStats:
 class _Block:
     """One 4 KB logical block in device DRAM."""
 
-    payloads: List[bytes]            # per-plane (TRACE) or single (word)
+    payloads: List[bytes]            # per-plane (bit-plane) or single (word)
     flags: List[int]                 # codec.RAW / codec.COMPRESSED
-    valid_elems: int
+    valid_elems: int                 # host-visible elements
+    padded_elems: int                # elements the payloads encode (≥ valid)
     kv_meta: Optional[KVBlockMeta] = None
 
     @property
@@ -98,220 +225,491 @@ class _IndexCache:
         return hit
 
 
-class BaseDevice:
-    """Common store / stats plumbing."""
+# ---------------------------------------------------------------------------
+# Layout strategies — the device-internal representation
+# ---------------------------------------------------------------------------
 
-    name = "base"
+class Layout:
+    """Encodes 4 KB blocks to payloads and decodes request batches back.
 
-    def __init__(self, codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
-                 index_cache_entries: int = 4096):
-        self.codec = codec
+    ``plane_aligned`` declares whether a reduced :class:`PrecisionView`
+    physically cuts DRAM traffic (TRACE Mechanism II); word layouts always
+    move full containers and reconstruct host-side (paper Issue 2).
+    ``kv_transform`` enables the cross-token exponent-delta transform on KV
+    windows (TRACE Mechanism I).
+    """
+
+    name = "layout"
+    plane_aligned = False
+    kv_transform = False
+
+    def encode_batch(self, chunks: Sequence[np.ndarray],
+                     codec: str) -> List[Tuple[List[bytes], List[int]]]:
+        raise NotImplementedError
+
+    def fetched_payloads(self, block: _Block, view: PrecisionView) -> Sequence[int]:
+        """Payload indices a read with ``view`` physically touches."""
+        raise NotImplementedError
+
+    def decode_batch(self, blocks: Sequence[_Block], view: PrecisionView,
+                     codec: str) -> List[np.ndarray]:
+        """Per-block host-visible uint16 (valid-trimmed, reconstructed)."""
+        raise NotImplementedError
+
+
+class WordLayout(Layout):
+    """Word-major containers; optional generic inline block compression."""
+
+    plane_aligned = False
+    kv_transform = False
+
+    def __init__(self, compress: bool):
+        self.compress = compress
+        self.name = "word-comp" if compress else "word"
+
+    def encode_batch(self, chunks, codec):
+        out = []
+        for chunk in chunks:
+            raw = chunk.tobytes()
+            if self.compress:
+                out.append(codecs.compress_block(raw, codec))
+            else:
+                out.append((raw, codecs.RAW))
+        return [([pay], [fl]) for pay, fl in out]
+
+    def fetched_payloads(self, block, view):
+        return (0,)
+
+    def decode_batch(self, blocks, view, codec):
+        if not blocks:
+            return []
+        outs = []
+        for b in blocks:
+            raw = codecs.decompress_block(
+                b.payloads[0], b.flags[0], codec, b.padded_elems * 2
+            )
+            outs.append(np.frombuffer(raw, dtype=np.uint16)[: b.valid_elems])
+        if view.is_full:
+            return [np.asarray(o) for o in outs]
+        # Host-side precision conversion: one vectorized pass over the batch.
+        flat = reconstruct_u16(np.concatenate(outs), view)
+        return _split_like(flat, outs)
+
+
+class BitplaneLayout(Layout):
+    """TRACE bit-plane substrate; plane-aligned fetch, vectorized batches."""
+
+    plane_aligned = True
+
+    def __init__(self, kv_transform: bool = True):
+        self.kv_transform = kv_transform
+        self.name = "bitplane-kv" if kv_transform else "bitplane"
+
+    def encode_batch(self, chunks, codec):
+        if not chunks:
+            return []
+        # One pack_planes call over the whole batch: blocks are padded to a
+        # byte multiple, so their plane streams concatenate cleanly.
+        sizes = [c.size for c in chunks]
+        for n in sizes:
+            if n % 8:
+                raise ValueError(f"block length {n} not a multiple of 8")
+        planes = pack_planes(np.concatenate(chunks))
+        out = []
+        off = 0
+        for n in sizes:
+            nb = n // 8
+            payloads, flags = [], []
+            for p in range(BF16_BITS):
+                pay, fl = codecs.compress_block(
+                    planes[p, off : off + nb].tobytes(), codec
+                )
+                payloads.append(pay)
+                flags.append(fl)
+            out.append((payloads, flags))
+            off += nb
+        return out
+
+    def fetched_payloads(self, block, view):
+        return view.fetched_planes()
+
+    # Max elements decoded per vectorized pass: big enough to amortize the
+    # per-call numpy overhead across many 4 KB blocks, small enough that
+    # plane/bit temporaries stay cache-resident (the win over per-block
+    # decode evaporates once working sets spill to DRAM).
+    SLAB_ELEMS = 64 * 1024
+
+    def decode_batch(self, blocks, view, codec):
+        if len(blocks) > 1:
+            # split into cache-sized slabs on block boundaries
+            slabs, cur, cur_elems = [], [], 0
+            for b in blocks:
+                if cur and cur_elems + b.padded_elems > self.SLAB_ELEMS:
+                    slabs.append(cur)
+                    cur, cur_elems = [], 0
+                cur.append(b)
+                cur_elems += b.padded_elems
+            slabs.append(cur)
+            if len(slabs) > 1:
+                out = []
+                for s in slabs:
+                    out.extend(self.decode_batch(s, view, codec))
+                return out
+        if not blocks:
+            return []
+        plane_set = view.fetched_planes()
+        nbytes = [b.padded_elems // 8 for b in blocks]
+        total = sum(nbytes)
+        # Per plane: join the batch's decompressed byte streams, then one
+        # subset-unpack for the whole slab (unfetched planes read as zero).
+        rows = np.stack([
+            np.frombuffer(
+                b"".join(
+                    codecs.decompress_block(b.payloads[p], b.flags[p], codec, nb)
+                    for b, nb in zip(blocks, nbytes)
+                ),
+                dtype=np.uint8,
+            )
+            for p in plane_set
+        ])
+        flat = unpack_planes_subset(rows, plane_set, total * 8)
+        segs: List[Optional[np.ndarray]] = []
+        off = 0
+        kv_groups: Dict[tuple, List[int]] = {}
+        for bi, b in enumerate(blocks):
+            seg = flat[off * 8 : off * 8 + b.valid_elems]
+            off += nbytes[bi]
+            if b.kv_meta is not None:
+                m = b.kv_meta
+                kv_groups.setdefault((m.n_tokens, m.n_channels), []).append(bi)
+                seg = seg[: m.n_tokens * m.n_channels]
+            segs.append(seg)
+        # Invert the exponent-delta FIRST: guard-bit rounding may carry from
+        # mantissa into the exponent, which is only meaningful in the
+        # real-exponent domain (not the zigzag-delta domain).  Same-shape
+        # windows invert as one vectorized pass.
+        for (_, _), idxs in kv_groups.items():
+            metas = [blocks[i].kv_meta for i in idxs]
+            inv = kv_inverse_batch(np.stack([segs[i] for i in idxs]), metas)
+            for i, tok in zip(idxs, inv):
+                segs[i] = tok
+        if view.is_full:
+            return segs
+        flat = reconstruct_u16(np.concatenate([s.ravel() for s in segs]), view)
+        return [r.reshape(s.shape) for r, s in zip(_split_like(flat, segs), segs)]
+
+
+def _split_like(flat: np.ndarray, segs: Sequence[np.ndarray]) -> List[np.ndarray]:
+    out, off = [], 0
+    for s in segs:
+        out.append(flat[off : off + s.size])
+        off += s.size
+    return out
+
+
+LAYOUTS = {
+    "word": lambda: WordLayout(compress=False),
+    "word-comp": lambda: WordLayout(compress=True),
+    "bitplane": lambda: BitplaneLayout(kv_transform=False),
+    "bitplane-kv": lambda: BitplaneLayout(kv_transform=True),
+}
+
+
+# ---------------------------------------------------------------------------
+# TierStore — the host↔device boundary
+# ---------------------------------------------------------------------------
+
+class TierStore:
+    """A tier device: a :class:`Layout` + codec behind a batched request API.
+
+    ``submit`` is the only real entry point; the legacy tensor/KV methods
+    are shims over it.  All traffic lands in per-request receipts, which
+    also roll up into ``self.stats``.
+    """
+
+    name = "tier"
+
+    def __init__(self, layout: Union[Layout, str] = "word",
+                 codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
+                 index_cache_entries: int = 4096, kv_window: int = 64,
+                 link_model: LinkModel = LinkModel()):
+        self.layout = LAYOUTS[layout]() if isinstance(layout, str) else layout
+        self.codec = codecs.resolve_codec(codec)
         self.block_elems = block_elems
+        self.kv_window = kv_window
+        self.link_model = link_model
         self.stats = DeviceStats()
         self._tensors: Dict[str, List[_Block]] = {}
         self._shapes: Dict[str, tuple] = {}
+        self._kv_staging: Dict[str, list] = {}   # stream → [token rows]
+        self._kv_channels: Dict[str, int] = {}
         self._index = _IndexCache(index_cache_entries)
 
-    # -- helpers -------------------------------------------------------------
-    def _commit(self, name: str, block: _Block):
-        self._tensors.setdefault(name, []).append(block)
-        self.stats.blocks += 1
-        self.stats.dram_bytes_stored += block.stored_bytes
-        self.stats.dram_bytes_written += block.stored_bytes
-        self.stats.raw_bytes_stored += block.valid_elems * 2
+    # -- batched entry point -------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> List[Receipt]:
+        """Execute a request batch; one receipt per request, in order.
 
-    def _touch_index(self, name: str, i: int):
-        if self._index.access((name, i)):
-            self.stats.index_hits += 1
+        Reads across the batch are decoded together (grouped by precision
+        view) so plane unpacking and reconstruction run as a few vectorized
+        numpy passes instead of one per 4 KB block.
+        """
+        # Validate the whole batch BEFORE mutating any device state, so a
+        # malformed request cannot leave committed blocks unaccounted.
+        # Reads may target any key written anywhere in the batch: writes
+        # drain before reads regardless of listed order.
+        written = {req.key for req in requests if isinstance(req, WriteReq)}
+        for req in requests:
+            if isinstance(req, WriteReq):
+                if req.kind not in (TENSOR, KV):
+                    raise ValueError(f"unknown request kind {req.kind!r}")
+            elif isinstance(req, ReadReq):
+                if (req.kind == KV and self.layout.kv_transform
+                        and req.view.r_e != EXP_BITS):
+                    raise ValueError(
+                        "KV views must keep the full (delta) exponent"
+                    )
+                if (req.key not in self._tensors
+                        and not self._kv_staging.get(req.key)
+                        and req.key not in written):
+                    raise KeyError(req.key)
+            else:
+                raise TypeError(f"not a tier request: {req!r}")
+        receipts: List[Receipt] = [None] * len(requests)  # type: ignore
+        # Writes execute in order first so reads in the same batch observe
+        # them (single-queue device semantics).
+        read_ix: List[int] = []
+        for i, req in enumerate(requests):
+            if isinstance(req, WriteReq):
+                rec = Receipt(key=req.key, op="write", kind=req.kind,
+                              tag=req.tag)
+                receipts[i] = rec
+                try:
+                    self._do_write(req, rec)
+                finally:
+                    # even on failure, whatever was committed stays counted
+                    self.stats.apply(rec)
+            else:
+                read_ix.append(i)
+        if read_ix:
+            for i, r in zip(read_ix, self._do_reads([requests[i] for i in read_ix])):
+                receipts[i] = r
+        return receipts
+
+    # -- write path ----------------------------------------------------------
+    def _do_write(self, req: WriteReq, rec: Receipt) -> Receipt:
+        data = np.ascontiguousarray(req.data, dtype=np.uint16)
+        rec.link_bytes_in += data.size * 2
+        if req.kind == TENSOR:
+            self._shapes[req.key] = data.shape
+            self._append_blocks(rec, req.key, data)
+        else:  # KV (kinds validated in submit)
+            rows = data[None, :] if data.ndim == 1 else data
+            self._kv_channels[req.key] = rows.shape[-1]
+            if not self.layout.kv_transform:
+                # Word devices store the token-major stream verbatim in
+                # 4 KB blocks — no staging window, no transform.
+                self._append_blocks(rec, req.key, rows)
+            else:
+                buf = self._kv_staging.setdefault(req.key, [])
+                for row in rows.reshape(-1, rows.shape[-1]):
+                    buf.append(row)
+                    if len(buf) >= self.kv_window:
+                        self._commit_kv_window(rec, req.key)
+                if req.flush and buf:
+                    self._commit_kv_window(rec, req.key)
+        rec.latency_s = self.link_model.latency(
+            rec.dram_bytes_written, rec.link_bytes_in
+        )
+        return rec
+
+    def _append_blocks(self, rec: Receipt, key: str, data: np.ndarray):
+        chunks, valids = [], []
+        for chunk, valid in iter_blocks(data, self.block_elems):
+            chunks.append(chunk)
+            valids.append(valid)
+        encoded = self.layout.encode_batch(chunks, self.codec)
+        for (payloads, flags), chunk, valid in zip(encoded, chunks, valids):
+            self._commit(rec, key, _Block(payloads, flags, valid, chunk.size))
+
+    def _commit(self, rec: Receipt, key: str, block: _Block):
+        self._tensors.setdefault(key, []).append(block)
+        rec.blocks += 1
+        rec.dram_bytes_stored += block.stored_bytes
+        rec.dram_bytes_written += block.stored_bytes
+        rec.raw_bytes_stored += block.valid_elems * 2
+
+    def _commit_kv_window(self, rec: Receipt, stream: str):
+        # only kv_transform layouts stage windows (see _do_write)
+        buf = self._kv_staging[stream]
+        window = np.stack(buf, axis=0)
+        buf.clear()  # in place — _do_write holds a reference to this list
+        transformed, meta = kv_forward(window)
+        n = transformed.size
+        if n % 8:
+            transformed = np.pad(transformed, (0, 8 - n % 8))
+        (payloads, flags), = self.layout.encode_batch([transformed], self.codec)
+        self._commit(rec, stream,
+                     _Block(payloads, flags, n, transformed.size, kv_meta=meta))
+
+    # -- read path -----------------------------------------------------------
+    def _do_reads(self, reqs: Sequence[ReadReq]) -> List[Receipt]:
+        # Gather every requested block, tally per-request DRAM/index traffic,
+        # then decode per view-group in vectorized passes.  Receipts are
+        # applied to the aggregate in a finally so an exception mid-batch
+        # cannot desync stats from already-flushed staging windows.
+        recs = [Receipt(key=r.key, op="read", kind=r.kind, tag=r.tag)
+                for r in reqs]
+        try:
+            return self._gather_and_decode(reqs, recs)
+        finally:
+            for rec in recs:
+                self.stats.apply(rec)
+
+    def _gather_and_decode(self, reqs: Sequence[ReadReq],
+                           recs: List[Receipt]) -> List[Receipt]:
+        req_blocks: List[List[_Block]] = []
+        for req, rec in zip(reqs, recs):
+            if req.kind == KV and self._kv_staging.get(req.key):
+                # implicit flush, accounted to this request
+                self._commit_kv_window(rec, req.key)
+            blocks = self._tensors.get(req.key, [])
+            if req.block_range is not None:
+                lo, hi = req.block_range
+                blocks = blocks[lo:hi]
+            for off, b in enumerate(blocks):
+                base = (req.block_range[0] if req.block_range else 0) + off
+                self._touch_index(rec, req.key, base)
+                for p in self.layout.fetched_payloads(b, req.view):
+                    rec.dram_bytes_read += len(b.payloads[p])
+            req_blocks.append(list(blocks))
+
+        # Group all blocks across requests by view (the view fixes both the
+        # fetched plane set and the reconstruction), decode each group once.
+        groups: Dict[PrecisionView, List[_Block]] = {}
+        for req, blocks in zip(reqs, req_blocks):
+            groups.setdefault(req.view, []).extend(blocks)
+        decoded = {
+            view: self.layout.decode_batch(blocks, view, self.codec)
+            for view, blocks in groups.items()
+        }
+
+        out: List[Receipt] = []
+        for req, rec, blocks in zip(reqs, recs, req_blocks):
+            pool = decoded[req.view]
+            segs, decoded[req.view] = pool[: len(blocks)], pool[len(blocks):]
+            rec.data = self._assemble(req, segs)
+            # Word devices always move full 16-bit containers over the link
+            # (paper Issue 2); plane-aligned layouts return the view's bits.
+            bits = req.view.bits if self.layout.plane_aligned else BF16_BITS
+            rec.link_bytes_out += rec.data.size * bits // 8
+            rec.latency_s = self.link_model.latency(
+                rec.dram_bytes_read, rec.link_bytes_out
+            )
+            out.append(rec)
+        return out
+
+    def _assemble(self, req: ReadReq, segs: List[np.ndarray]) -> np.ndarray:
+        if not segs:
+            return np.empty((0,), dtype=np.uint16)
+        if req.kind == KV:
+            if segs[0].ndim == 2:           # kv-transformed: (t, C) per window
+                return np.concatenate(segs, axis=0)
+            flat = np.concatenate(segs)
+            C = self._kv_channels.get(req.key, flat.size)
+            return flat.reshape(-1, C)
+        flat = np.concatenate([s.ravel() for s in segs])
+        shape = self._shapes.get(req.key)
+        if (req.block_range is None and shape is not None
+                and flat.size == int(np.prod(shape))):
+            return flat.reshape(shape)
+        # ranged reads / multi-write appends return the flat element stream
+        return flat
+
+    def _touch_index(self, rec: Receipt, key: str, i: int):
+        if self._index.access((key, i)):
+            rec.index_hits += 1
         else:
-            self.stats.index_misses += 1
-            self.stats.index_bytes += INDEX_ENTRY_BYTES
-            self.stats.dram_bytes_read += INDEX_ENTRY_BYTES
+            rec.index_misses += 1
+            rec.index_bytes += INDEX_ENTRY_BYTES
+            rec.dram_bytes_read += INDEX_ENTRY_BYTES
 
-    def footprint(self, name: str) -> int:
-        return sum(b.stored_bytes for b in self._tensors[name])
+    # -- introspection -------------------------------------------------------
+    def n_blocks(self, key: str) -> int:
+        return len(self._tensors.get(key, []))
 
-    def logical_bytes(self, name: str) -> int:
-        return sum(b.valid_elems for b in self._tensors[name]) * 2
+    def footprint(self, key: str) -> int:
+        return sum(b.stored_bytes for b in self._tensors[key])
 
-    def delete(self, name: str):
-        for b in self._tensors.pop(name, []):
+    def logical_bytes(self, key: str) -> int:
+        return sum(b.valid_elems for b in self._tensors[key]) * 2
+
+    def delete(self, key: str):
+        for b in self._tensors.pop(key, []):
             self.stats.dram_bytes_stored -= b.stored_bytes
             self.stats.raw_bytes_stored -= b.valid_elems * 2
             self.stats.blocks -= 1
-        self._shapes.pop(name, None)
+        self._shapes.pop(key, None)
+        self._kv_staging.pop(key, None)
+
+    # -- legacy shims (deprecated; forward to submit) ------------------------
+    def write_tensor(self, name: str, u16: np.ndarray):
+        self.submit([WriteReq(name, u16, kind=TENSOR)])
+
+    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
+        return self.submit([ReadReq(name, kind=TENSOR, view=view)])[0].data
+
+    def write_kv(self, stream: str, tokens_u16: np.ndarray):
+        # Matches the historical semantics: full windows commit eagerly,
+        # partial tails stay staged until flush_kv / a KV read.
+        self.submit([WriteReq(stream, tokens_u16, kind=KV, flush=False)])
+
+    def read_kv(self, stream: str, view: PrecisionView = FULL) -> np.ndarray:
+        return self.submit([ReadReq(stream, kind=KV, view=view)])[0].data
+
+    def flush_kv(self, stream: str):
+        if self._kv_staging.get(stream):
+            rec = Receipt(key=stream, op="write", kind=KV)
+            self._commit_kv_window(rec, stream)
+            self.stats.apply(rec)
 
 
-class PlainDevice(BaseDevice):
+# ---------------------------------------------------------------------------
+# Named device configurations (paper Table III)
+# ---------------------------------------------------------------------------
+
+class PlainDevice(TierStore):
     """CXL-Plain: word-major, no compression, full-container fetch."""
 
     name = "plain"
 
-    def write_tensor(self, name: str, u16: np.ndarray):
-        self._shapes[name] = u16.shape
-        self.stats.link_bytes_in += u16.size * 2
-        for chunk, valid in iter_blocks(u16, self.block_elems):
-            self._commit(name, _Block([chunk.tobytes()], [codecs.RAW], valid))
-
-    # KV arrives token-major; a word device stores it verbatim.
-    write_kv = write_tensor
-
-    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
-        """Always moves full containers; precision conversion is host-side."""
-        out = []
-        for i, b in enumerate(self._tensors[name]):
-            self._touch_index(name, i)
-            self.stats.dram_bytes_read += len(b.payloads[0])
-            u16 = np.frombuffer(b.payloads[0], dtype=np.uint16)[: b.valid_elems]
-            out.append(u16)
-        flat = np.concatenate(out)
-        self.stats.link_bytes_out += flat.size * 2
-        flat = reconstruct_u16(flat, view) if not view.is_full else flat
-        return flat.reshape(self._shapes[name])
-
-    read_kv = read_tensor
+    def __init__(self, codec: str = "lz4", **kw):
+        super().__init__(layout=WordLayout(compress=False), codec=codec, **kw)
 
 
-class GCompDevice(PlainDevice):
+class GCompDevice(TierStore):
     """CXL-GComp: word-major + generic inline 4 KB block compression."""
 
     name = "gcomp"
 
-    def write_tensor(self, name: str, u16: np.ndarray):
-        self._shapes[name] = u16.shape
-        self.stats.link_bytes_in += u16.size * 2
-        for chunk, valid in iter_blocks(u16, self.block_elems):
-            payload, flag = codecs.compress_block(chunk.tobytes(), self.codec)
-            self._commit(name, _Block([payload], [flag], valid))
-
-    write_kv = write_tensor
-
-    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
-        out = []
-        for i, b in enumerate(self._tensors[name]):
-            self._touch_index(name, i)
-            self.stats.dram_bytes_read += len(b.payloads[0])
-            raw = codecs.decompress_block(
-                b.payloads[0], b.flags[0], self.codec, self.block_elems * 2
-            )
-            u16 = np.frombuffer(raw, dtype=np.uint16)[: b.valid_elems]
-            out.append(u16)
-        flat = np.concatenate(out)
-        self.stats.link_bytes_out += flat.size * 2
-        flat = reconstruct_u16(flat, view) if not view.is_full else flat
-        return flat.reshape(self._shapes[name])
-
-    read_kv = read_tensor
+    def __init__(self, codec: str = "lz4", **kw):
+        super().__init__(layout=WordLayout(compress=True), codec=codec, **kw)
 
 
-class TraceDevice(BaseDevice):
+class TraceDevice(TierStore):
     """TRACE: bit-plane substrate + KV transform + plane-aligned fetch."""
 
     name = "trace"
 
-    def __init__(self, codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
-                 index_cache_entries: int = 4096, kv_window: int = 64):
-        super().__init__(codec, block_elems, index_cache_entries)
-        self.kv_window = kv_window
-        self._kv_staging: Dict[str, list] = {}   # stream → [token rows]
-        self._kv_channels: Dict[str, int] = {}
+    def __init__(self, codec: str = "lz4", **kw):
+        super().__init__(layout=BitplaneLayout(kv_transform=True),
+                         codec=codec, **kw)
 
-    # -- weights: direct bit-plane encoding (paper §III-B) -------------------
-    def write_tensor(self, name: str, u16: np.ndarray):
-        self._shapes[name] = u16.shape
-        self.stats.link_bytes_in += u16.size * 2
-        for chunk, valid in iter_blocks(u16, self.block_elems):
-            planes = pack_planes(chunk)
-            payloads, flags = [], []
-            for p in range(BF16_BITS):
-                pay, fl = codecs.compress_block(planes[p].tobytes(), self.codec)
-                payloads.append(pay)
-                flags.append(fl)
-            self._commit(name, _Block(payloads, flags, valid))
 
-    # -- KV write path: staging buffer → transform → planes (Fig. 8) ---------
-    def write_kv(self, stream: str, tokens_u16: np.ndarray):
-        """Append token-major rows ``(t, C)`` to a KV stream."""
-        if tokens_u16.ndim == 1:
-            tokens_u16 = tokens_u16[None, :]
-        C = tokens_u16.shape[1]
-        self._kv_channels[stream] = C
-        buf = self._kv_staging.setdefault(stream, [])
-        self.stats.link_bytes_in += tokens_u16.size * 2
-        for row in tokens_u16:
-            buf.append(row)
-            if len(buf) >= self.kv_window:
-                self._commit_kv_window(stream)
-
-    def flush_kv(self, stream: str):
-        if self._kv_staging.get(stream):
-            self._commit_kv_window(stream)
-
-    def _commit_kv_window(self, stream: str):
-        buf = self._kv_staging[stream]
-        block = np.stack(buf, axis=0)
-        buf.clear()  # in place — write_kv holds a reference to this list
-        transformed, meta = kv_forward(block)
-        # pad to byte multiple for plane packing
-        n = transformed.size
-        if n % 8:
-            transformed = np.pad(transformed, (0, 8 - n % 8))
-        planes = pack_planes(transformed)
-        payloads, flags = [], []
-        for p in range(BF16_BITS):
-            pay, fl = codecs.compress_block(planes[p].tobytes(), self.codec)
-            payloads.append(pay)
-            flags.append(fl)
-        blk = _Block(payloads, flags, n, kv_meta=meta)
-        self._commit(stream, blk)
-
-    # -- reads: plane-aligned fetch + reconstruction (Eq. 6-8) ---------------
-    def _fetch_planes(self, name: str, i: int, b: _Block,
-                      plane_set: tuple) -> np.ndarray:
-        self._touch_index(name, i)
-        nbytes = plane_bytes(((b.valid_elems + 7) // 8) * 8)
-        planes = np.zeros((BF16_BITS, nbytes), dtype=np.uint8)
-        for p in plane_set:
-            self.stats.dram_bytes_read += len(b.payloads[p])
-            raw = codecs.decompress_block(b.payloads[p], b.flags[p], self.codec, nbytes)
-            planes[p] = np.frombuffer(raw, dtype=np.uint8)
-        return planes
-
-    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
-        out = []
-        for i, b in enumerate(self._tensors[name]):
-            planes = self._fetch_planes(name, i, b, view.fetched_planes())
-            u16 = unpack_planes(planes, b.valid_elems)
-            out.append(reconstruct_u16(u16, view))
-        flat = np.concatenate(out)
-        self.stats.link_bytes_out += flat.size * view.bits // 8
-        return flat.reshape(self._shapes.get(name, flat.shape))
-
-    def read_kv(self, stream: str, view: PrecisionView = FULL) -> np.ndarray:
-        """Return token-major KV.  Exponent planes hold zigzag deltas, so KV
-        views always fetch all 8 exponent planes (they compress best) and
-        scale mantissa planes only (see precision.py note)."""
-        if view.r_e != EXP_BITS:
-            raise ValueError("KV views must keep the full (delta) exponent")
-        self.flush_kv(stream)
-        rows = []
-        for i, b in enumerate(self._tensors.get(stream, [])):
-            planes = self._fetch_planes(stream, i, b, view.fetched_planes())
-            stream_u16 = unpack_planes(planes, b.valid_elems)
-            meta = b.kv_meta
-            n_real = meta.n_tokens * meta.n_channels
-            # Invert the exponent-delta FIRST: guard-bit rounding may carry
-            # from mantissa into the exponent, which is only meaningful in
-            # the real-exponent domain (not the zigzag-delta domain).
-            token_major = kv_inverse(stream_u16[:n_real], meta)
-            rows.append(reconstruct_u16(token_major, view))
-        out = np.concatenate(rows, axis=0)
-        self.stats.link_bytes_out += out.size * view.bits // 8
-        return out
-
+# Compatibility alias: the old common base class.
+BaseDevice = TierStore
 
 DEVICE_KINDS = {"plain": PlainDevice, "gcomp": GCompDevice, "trace": TraceDevice}
 
 
-def make_device(kind: str, **kw) -> BaseDevice:
+def make_device(kind: str, **kw) -> TierStore:
     return DEVICE_KINDS[kind](**kw)

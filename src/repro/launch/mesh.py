@@ -18,23 +18,33 @@ per (arch × shape) cell:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax has Auto-only meshes
+    AxisType = None
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..models.sharding import MeshRules
+
+
+def _mk_mesh(shape: tuple, axes: tuple):
+    """jax.make_mesh with ``axis_types`` only where the installed jax has
+    it; older releases treat every axis as Auto already."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _mk_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mk_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

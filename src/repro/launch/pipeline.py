@@ -26,8 +26,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
 from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
 
 from ..configs.base import ArchConfig
 from ..models import layers as L

@@ -358,8 +358,9 @@ def moe_block_ep(x, p, cfg, mesh, token_axes):
     experts over 'model'; expert weights FSDP-gathered over 'data' inside
     (standard FSDP all-gather, same as the dense layers).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
 
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k

@@ -2,11 +2,17 @@
 
 KV is managed as fixed-size pages (a window of tokens for all channels of
 one layer's K or V).  Pages live in HBM while the hot budget lasts; the
-long tail spills to the offload tier (a ``core.tier`` device — Plain,
-GComp or TRACE).  Page *importance* is long-tailed, so spilled pages are
-assigned precision tiers, which a TRACE device serves with plane-aligned
-fetch (Mechanism II) — word devices must always move full containers
-(paper Issue 2).
+long tail spills to the offload tier (a ``core.tier`` :class:`TierStore`
+— Plain, GComp or TRACE).  Page *importance* is long-tailed, so spilled
+pages are assigned precision tiers, which a plane-aligned layout serves
+with plane-aligned fetch (Mechanism II) — word layouts must always move
+full containers (paper Issue 2).
+
+The pool speaks only the TierStore request protocol: spills are
+``WriteReq`` submissions, reads are batched ``ReadReq`` submissions (one
+``submit`` per layer gather / spill-readback), and every receipt is folded
+into per-page traffic counters so attribution is per-page / per-layer
+rather than one global stats blob.
 
 The shipped policy mirrors Table II's best row:
     top pages   → BF16 (full, lossless)
@@ -19,12 +25,12 @@ most compressible planes — and scale mantissa planes only (precision.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.precision import FULL, MAN0, MAN4, PrecisionView
-from ..core.tier import BaseDevice, TraceDevice, make_device
+from ..core.tier import KV, ReadReq, Receipt, TierStore, WriteReq, make_device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +71,29 @@ class _Page:
     resident: Optional[np.ndarray] = None   # HBM copy (token-major u16) or None
 
 
+@dataclasses.dataclass
+class PageTraffic:
+    """Per-page roll-up of the receipts this pool has seen."""
+
+    dram_bytes_read: int = 0
+    dram_bytes_written: int = 0
+    link_bytes_in: int = 0
+    link_bytes_out: int = 0
+    index_bytes: int = 0
+    requests: int = 0
+
+    def add(self, r: Receipt):
+        """Fold one receipt in (field names shared with Receipt)."""
+        for f in dataclasses.fields(self):
+            if f.name != "requests":
+                setattr(self, f.name, getattr(self, f.name) + getattr(r, f.name))
+        self.requests += 1
+
+    def merge(self, other: "PageTraffic"):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
 class KVPagePool:
     """Per-sequence paged KV with HBM budget + tier spill.
 
@@ -74,7 +103,7 @@ class KVPagePool:
 
     def __init__(
         self,
-        device: BaseDevice | str = "trace",
+        device: TierStore | str = "trace",
         page_tokens: int = 64,
         hbm_budget_bytes: int = 1 << 30,
         policy: PagePolicy = PAPER_POLICY,
@@ -86,8 +115,23 @@ class KVPagePool:
         self._pages: List[_Page] = []
         self._hbm_used = 0
         self.spill_events: List[_Page] = []   # drained by the serving engine
-        if isinstance(self.device, TraceDevice):
-            self.device.kv_window = page_tokens
+        self.page_traffic: Dict[str, PageTraffic] = {}
+        # One page per KV window: the device commits each page's stream in
+        # a single transform window.
+        self.device.kv_window = page_tokens
+
+    def _account(self, receipts: Sequence[Receipt]):
+        for r in receipts:
+            self.page_traffic.setdefault(r.key, PageTraffic()).add(r)
+
+    def traffic_by_layer(self) -> Dict[int, PageTraffic]:
+        """Aggregate per-page traffic up to layers (key format L{n}.*)."""
+        out: Dict[int, PageTraffic] = {}
+        for p in self._pages:
+            t = self.page_traffic.get(p.key)
+            if t is not None:
+                out.setdefault(p.layer, PageTraffic()).merge(t)
+        return out
 
     # -- write path -----------------------------------------------------------
     def append_page(self, layer: int, kind: str, start: int,
@@ -104,13 +148,6 @@ class KVPagePool:
         self._pages.append(page)
         self._rebalance()
 
-    def _spill(self, page: _Page, tokens_u16: np.ndarray):
-        self.device.write_kv(page.key, tokens_u16)
-        if isinstance(self.device, TraceDevice):
-            self.device.flush_kv(page.key)
-        page.resident = None
-        self.spill_events.append(page)
-
     def _rebalance(self):
         """Evict the least-important resident pages when over budget."""
         if self._hbm_used <= self.hbm_budget:
@@ -119,12 +156,17 @@ class KVPagePool:
             (p for p in self._pages if p.resident is not None),
             key=lambda p: p.importance,
         )
+        writes = []
         for p in resident:
             if self._hbm_used <= self.hbm_budget:
                 break
             tok = p.resident
             self._hbm_used -= tok.size * 2
-            self._spill(p, tok)
+            writes.append(WriteReq(p.key, tok, kind=KV, flush=True, tag=p.key))
+            p.resident = None
+            self.spill_events.append(p)
+        if writes:
+            self._account(self.device.submit(writes))
 
     def update_importance(self, scores: Dict[str, float]):
         for p in self._pages:
@@ -132,35 +174,50 @@ class KVPagePool:
                 p.importance = scores[p.key]
         self._rebalance()
 
-    def read_page(self, page: _Page) -> np.ndarray:
-        """One spilled page through the tier at its current policy view."""
+    # -- read path --------------------------------------------------------------
+    def _spill_ranks(self, pages=None) -> Dict[str, int]:
         spilled = sorted(
-            (p for p in self._pages if p.resident is None),
+            (p for p in (pages if pages is not None else self._pages)
+             if p.resident is None),
             key=lambda p: -p.importance,
         )
-        rank = next(i for i, p in enumerate(spilled) if p.key == page.key)
-        return self.device.read_kv(page.key, self.policy.view_for_rank(rank))
+        return {p.key: i for i, p in enumerate(spilled)}
 
-    # -- read path --------------------------------------------------------------
+    def read_page(self, page: _Page) -> np.ndarray:
+        """One spilled page through the tier at its current policy view."""
+        return self.read_pages([page])[0]
+
+    def read_pages(self, pages: Sequence[_Page]) -> List[np.ndarray]:
+        """Batched tier read of spilled pages (one submit for the batch)."""
+        rank = self._spill_ranks()
+        reqs = [
+            ReadReq(p.key, kind=KV, view=self.policy.view_for_rank(rank[p.key]),
+                    tag=p.key)
+            for p in pages
+        ]
+        receipts = self.device.submit(reqs)
+        self._account(receipts)
+        return [r.data for r in receipts]
+
     def read_layer(self, layer: int, kind: str) -> np.ndarray:
         """Gather all pages of (layer, kind) in token order, applying the
-        precision policy to spilled pages (ranked by importance)."""
+        precision policy to spilled pages (ranked by importance).  All
+        spilled pages go to the device as one request batch."""
         pages = sorted(
             (p for p in self._pages if p.layer == layer and p.kind == kind),
             key=lambda p: p.start,
         )
-        spilled = sorted(
-            (p for p in pages if p.resident is None),
-            key=lambda p: -p.importance,
-        )
-        rank = {p.key: i for i, p in enumerate(spilled)}
-        out = []
-        for p in pages:
-            if p.resident is not None:
-                out.append(p.resident)
-            else:
-                view = self.policy.view_for_rank(rank[p.key])
-                out.append(self.device.read_kv(p.key, view))
+        rank = self._spill_ranks(pages)
+        reqs = [
+            ReadReq(p.key, kind=KV, view=self.policy.view_for_rank(rank[p.key]),
+                    tag=p.key)
+            for p in pages if p.resident is None
+        ]
+        rs = self.device.submit(reqs)
+        self._account(rs)
+        served = {r.key: r.data for r in rs}
+        out = [p.resident if p.resident is not None else served[p.key]
+               for p in pages]
         return np.concatenate(out, axis=0) if out else np.empty((0, 0), np.uint16)
 
     # -- accounting ---------------------------------------------------------------

@@ -29,7 +29,6 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core.system_model import SystemSpec
-from ..core.tier import TraceDevice
 from ..models import decode_step, forward, init_cache
 from .paging import KVPagePool, PagePolicy, PAPER_POLICY
 
@@ -110,14 +109,17 @@ class ServeEngine:
     def _apply_spill_readback(self):
         """Replace spilled pages' jnp-cache content with the tier-served
         values at their policy precision, so generation quality actually
-        reflects the device pipeline (and DRAM reads are tallied)."""
+        reflects the device pipeline (and DRAM reads are tallied).  All
+        spilled pages of one commit go to the device as a single request
+        batch (vectorized plane decode on the device side)."""
         import ml_dtypes
 
         events, self.pool.spill_events = self.pool.spill_events, []
+        if not events:
+            return
         layers = dict(self.cache["layers"])
         touched = False
-        for page in events:
-            u16 = self.pool.read_page(page)
+        for page, u16 in zip(events, self.pool.read_pages(events)):
             buf = np.asarray(layers[page.kind])
             target = buf[page.layer][:, page.start : page.start + self.page_tokens]
             vals = u16.view(ml_dtypes.bfloat16).reshape(target.shape)
@@ -182,6 +184,10 @@ class ServeEngine:
         """Token-major KV for (layer, kind) as the host would see it after a
         round-trip through the tier at the current policy."""
         return self.pool.read_layer(layer, kind)
+
+    def layer_traffic(self):
+        """Per-layer tier traffic, attributed from the pool's receipts."""
+        return self.pool.traffic_by_layer()
 
     def stats(self) -> ServeStats:
         d = self.pool.stats()

@@ -22,7 +22,7 @@ from typing import Dict
 import numpy as np
 
 from ..core.precision import FULL, MAN0, MAN2, MAN4, PrecisionView
-from ..core.tier import BaseDevice, make_device
+from ..core.tier import ReadReq, TierStore, WriteReq, make_device
 
 # Precision tiers by unit importance rank-fraction (Fig. 17-style mix).
 DEFAULT_TIERS = ((0.4, FULL), (0.3, MAN4), (0.2, MAN2), (0.1, MAN0))
@@ -42,7 +42,7 @@ class WeightStore:
     matrices, one head's projections, ...).  Importance drives the view.
     """
 
-    def __init__(self, device: BaseDevice | str = "trace",
+    def __init__(self, device: TierStore | str = "trace",
                  tiers=DEFAULT_TIERS):
         self.device = make_device(device) if isinstance(device, str) else device
         self.tiers = tiers
@@ -53,7 +53,7 @@ class WeightStore:
         import ml_dtypes
 
         u16 = np.ascontiguousarray(w, dtype=ml_dtypes.bfloat16).view(np.uint16)
-        self.device.write_tensor(name, u16)
+        self.device.submit([WriteReq(name, u16, tag=name)])
         self._units[name] = UnitMeta(name, w.shape, importance)
 
     def set_importance(self, scores: Dict[str, float]):
@@ -78,11 +78,20 @@ class WeightStore:
         import ml_dtypes
 
         view = view or self.view_for(name)
-        u16 = self.device.read_tensor(name, view)
-        return u16.view(ml_dtypes.bfloat16).reshape(self._units[name].shape)
+        rec, = self.device.submit([ReadReq(name, view=view, tag=name)])
+        return rec.data.view(ml_dtypes.bfloat16).reshape(self._units[name].shape)
 
     def fetch_all(self) -> Dict[str, np.ndarray]:
-        return {n: self.fetch(n) for n in self._units}
+        """One batched submit for every unit at its policy view — the
+        per-decode-step weight stream as a single request batch."""
+        import ml_dtypes
+
+        reqs = [ReadReq(n, view=self.view_for(n), tag=n) for n in self._units]
+        recs = self.device.submit(reqs)
+        return {
+            n: r.data.view(ml_dtypes.bfloat16).reshape(self._units[n].shape)
+            for n, r in zip(self._units, recs)
+        }
 
     # -- accounting ----------------------------------------------------------------
     @property

@@ -2,7 +2,34 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: only @given tests skip
+    class _AnyStrategy:
+        """Chainable stand-in so module-level strategy expressions parse."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            return skipped
+
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn
 
 from repro.core import bitplane as bp
 from repro.core import codec
@@ -179,6 +206,7 @@ def test_lz4_compresses_runs():
     assert codec.lz4_decompress(comp) == data
 
 
+@pytest.mark.skipif(not codec.HAVE_ZSTD, reason="zstandard not installed")
 def test_zstd_roundtrip():
     rng = np.random.default_rng(7)
     data = rng.integers(0, 4, size=4096, dtype=np.uint8).tobytes()

@@ -1,0 +1,258 @@
+"""TierStore request/receipt protocol: batched semantics + accounting.
+
+Receipts are the unit of traffic attribution; the legacy ``DeviceStats``
+aggregate must be exactly the sum of all receipts, and batched submission
+must be byte-identical to sequential single-request reads.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.precision import FULL, MAN0, MAN4, VIEWS
+from repro.core.tier import (
+    KV,
+    TENSOR,
+    BitplaneLayout,
+    LAYOUTS,
+    ReadReq,
+    TierStore,
+    WordLayout,
+    WriteReq,
+    make_device,
+)
+
+RECEIPT_FIELDS = (
+    "dram_bytes_read", "dram_bytes_written", "dram_bytes_stored",
+    "raw_bytes_stored", "link_bytes_in", "link_bytes_out",
+    "index_bytes", "index_hits", "index_misses", "blocks",
+)
+
+
+def _sum_receipts(receipts):
+    return {f: sum(getattr(r, f) for r in receipts) for f in RECEIPT_FIELDS}
+
+
+def _stats_dict(stats):
+    return {f: getattr(stats, f) for f in RECEIPT_FIELDS}
+
+
+@pytest.mark.parametrize("kind", ["plain", "gcomp", "trace"])
+def test_receipts_sum_to_device_totals_mixed_batch(kind):
+    """Per-request receipts across a mixed tensor/KV session reproduce the
+    DeviceStats aggregate field-for-field."""
+    dev = make_device(kind, kv_window=32)
+    w = synth.weights(5_000, seed=0)
+    kv = synth.kv_cache(96, 64, seed=1)
+
+    receipts = []
+    receipts += dev.submit([
+        WriteReq("w", w, kind=TENSOR),
+        WriteReq("s0", kv[:48], kind=KV),
+        WriteReq("s1", kv[48:], kind=KV),
+    ])
+    receipts += dev.submit([
+        ReadReq("w", kind=TENSOR, view=MAN4),
+        ReadReq("s0", kind=KV),
+        ReadReq("w", kind=TENSOR),
+        ReadReq("s1", kind=KV, view=MAN0 if kind == "trace" else FULL),
+    ])
+    assert _sum_receipts(receipts) == _stats_dict(dev.stats)
+    for r in receipts:
+        assert r.latency_s > 0
+
+
+def test_write_receipts_carry_capacity_and_compression():
+    dev = make_device("trace")
+    kv = synth.kv_cache(256, 128, seed=2)
+    rec, = dev.submit([WriteReq("kv", kv, kind=KV)])
+    assert rec.op == "write" and rec.kind == KV
+    assert rec.blocks == dev.stats.blocks > 0
+    assert rec.raw_bytes_stored == kv.size * 2
+    assert 0 < rec.dram_bytes_stored < rec.raw_bytes_stored  # compressed
+    assert rec.link_bytes_in == kv.size * 2
+
+
+@pytest.mark.parametrize("kind", ["plain", "gcomp", "trace"])
+def test_batched_reads_byte_identical_to_sequential(kind):
+    """One submit over many streams == the same reads one at a time."""
+    dev_a = make_device(kind, kv_window=16)
+    dev_b = make_device(kind, kv_window=16)
+    views = [FULL, VIEWS["man4"], VIEWS["man0"], FULL]
+    streams = {}
+    for i in range(8):
+        streams[f"p{i}"] = synth.kv_cache(16, 64, seed=10 + i)
+    for dev in (dev_a, dev_b):
+        dev.submit([WriteReq(k, v, kind=KV) for k, v in streams.items()])
+
+    reqs = [ReadReq(k, kind=KV, view=views[i % len(views)])
+            for i, k in enumerate(streams)]
+    batched = dev_a.submit(reqs)
+    for req, rec in zip(reqs, batched):
+        seq, = dev_b.submit([req])
+        np.testing.assert_array_equal(rec.data, seq.data)
+        assert rec.dram_bytes_read == seq.dram_bytes_read
+        assert rec.link_bytes_out == seq.link_bytes_out
+    # both devices saw identical total traffic
+    assert _stats_dict(dev_a.stats) == _stats_dict(dev_b.stats)
+
+
+def test_batch_and_legacy_shims_agree():
+    dev = make_device("trace")
+    w = synth.weights(9_000, seed=3)
+    dev.write_tensor("w", w)
+    via_shim = dev.read_tensor("w", VIEWS["man4"])
+    via_batch, = dev.submit([ReadReq("w", view=VIEWS["man4"])])
+    np.testing.assert_array_equal(via_shim, via_batch.data)
+
+
+def test_write_then_read_in_one_batch():
+    dev = make_device("trace")
+    w = synth.weights(4_096, seed=4)
+    wrec, rrec = dev.submit([WriteReq("w", w), ReadReq("w")])
+    assert wrec.op == "write" and rrec.op == "read"
+    np.testing.assert_array_equal(rrec.data.ravel(), w)
+
+
+def test_block_range_reads():
+    dev = make_device("trace")
+    w = synth.weights(2048 * 4, seed=5)
+    dev.write_tensor("w", w)
+    whole, = dev.submit([ReadReq("w")])
+    part, = dev.submit([ReadReq("w", block_range=(1, 3))])
+    np.testing.assert_array_equal(part.data, whole.data.ravel()[2048:2048 * 3])
+    assert part.blocks == 0  # blocks counts commits, not reads
+    assert part.dram_bytes_read < whole.dram_bytes_read
+
+
+def test_kv_read_flushes_partial_window_with_accounting():
+    dev = make_device("trace", kv_window=64)
+    kv = synth.kv_cache(40, 32, seed=6)  # < one window
+    dev.submit([WriteReq("s", kv, kind=KV, flush=False)])
+    assert dev.stats.blocks == 0  # still staged
+    rec, = dev.submit([ReadReq("s", kind=KV)])
+    np.testing.assert_array_equal(rec.data, kv)
+    # the implicit flush is accounted on the read's receipt
+    assert rec.dram_bytes_written > 0
+    assert _stats_dict(dev.stats)["dram_bytes_written"] == rec.dram_bytes_written
+
+
+def test_word_layouts_cannot_scale_link_traffic():
+    """Reduced views cut DRAM + link bytes only on plane-aligned layouts
+    (paper Issue 2); word devices move full containers either way."""
+    n = 2048 * 8
+    w = synth.weights(n, seed=7)
+    for kind, scales in (("plain", False), ("gcomp", False), ("trace", True)):
+        dev = make_device(kind)
+        dev.write_tensor("w", w)
+        full, = dev.submit([ReadReq("w", view=FULL)])
+        low, = dev.submit([ReadReq("w", view=VIEWS["man0"])])
+        if scales:
+            assert low.link_bytes_out < full.link_bytes_out
+            assert low.dram_bytes_read < full.dram_bytes_read
+        else:
+            assert low.link_bytes_out == full.link_bytes_out
+
+
+def test_trace_kv_view_requires_full_exponent():
+    dev = make_device("trace", kv_window=16)
+    dev.submit([WriteReq("s", synth.kv_cache(16, 16, seed=8), kind=KV)])
+    from repro.core.precision import PrecisionView
+
+    with pytest.raises(ValueError):
+        dev.submit([ReadReq("s", kind=KV, view=PrecisionView(r_e=4))])
+
+
+def test_layout_registry_and_device_configs():
+    assert set(LAYOUTS) == {"word", "word-comp", "bitplane", "bitplane-kv"}
+    assert isinstance(make_device("plain").layout, WordLayout)
+    assert not make_device("plain").layout.compress
+    assert make_device("gcomp").layout.compress
+    tr = make_device("trace")
+    assert isinstance(tr.layout, BitplaneLayout) and tr.layout.kv_transform
+    # a custom composition: bit-plane substrate without the KV transform
+    store = TierStore(layout="bitplane", codec="lz4", kv_window=32)
+    kv = synth.kv_cache(64, 32, seed=9)
+    store.submit([WriteReq("s", kv, kind=KV)])
+    rec, = store.submit([ReadReq("s", kind=KV)])
+    np.testing.assert_array_equal(rec.data, kv)
+
+
+def test_pool_speaks_protocol_only_and_attributes_traffic():
+    """KVPagePool works with every device kind (no isinstance special
+    cases) and its per-page traffic sums to the device aggregate."""
+    import ml_dtypes
+
+    from repro.runtime.paging import KVPagePool
+
+    for kind in ("plain", "gcomp", "trace"):
+        pool = KVPagePool(kind, page_tokens=8, hbm_budget_bytes=8 * 64 * 2 * 2)
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            page = rng.normal(size=(8, 64)).astype(ml_dtypes.bfloat16)
+            pool.append_page(0, "k", i * 8, page.view(np.uint16),
+                             importance=float(i))
+        assert pool.spilled_pages == 4
+        out = pool.read_layer(0, "k")
+        assert out.shape == (48, 64)
+        got = {
+            f: sum(getattr(t, f) for t in pool.page_traffic.values())
+            for f in ("dram_bytes_read", "dram_bytes_written",
+                      "link_bytes_in", "link_bytes_out", "index_bytes")
+        }
+        want = {f: getattr(pool.stats(), f) for f in got}
+        assert got == want, kind
+        assert pool.traffic_by_layer()[0].requests == sum(
+            t.requests for t in pool.page_traffic.values()
+        )
+
+
+def test_missing_key_read_raises_before_any_mutation():
+    dev = make_device("trace")
+    dev.submit([WriteReq("w", synth.weights(2048, seed=0))])
+    before = _stats_dict(dev.stats)
+    with pytest.raises(KeyError):
+        dev.submit([WriteReq("x", synth.weights(2048, seed=1)),
+                    ReadReq("typo")])
+    # the invalid batch committed nothing and counted nothing
+    assert _stats_dict(dev.stats) == before
+    with pytest.raises(KeyError):
+        dev.read_tensor("typo")
+
+
+def test_batched_kv_stream_read_faster_than_sequential():
+    """A 64-page batched submit must beat 64 sequential read_kv calls —
+    the batch path amortizes plane unpack + reconstruction across blocks.
+    Serving-sized pages (16 tokens x 64 ch) keep the margin wide."""
+    dev = make_device("trace", kv_window=16)
+    keys = [f"p{i}" for i in range(64)]
+    dev.submit([
+        WriteReq(k, synth.kv_cache(16, 64, seed=100 + i), kind=KV)
+        for i, k in enumerate(keys)
+    ])
+    reqs = [ReadReq(k, kind=KV) for k in keys]
+
+    def batched():
+        return [r.data for r in dev.submit(reqs)]
+
+    def sequential():
+        return [dev.read_kv(k) for k in keys]
+
+    # warm up (index cache population is identical for both afterwards)
+    b0, s0 = batched(), sequential()
+    for b, s in zip(b0, s0):
+        np.testing.assert_array_equal(b, s)
+
+    def best_of(fn, reps=3):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_batch, t_seq = best_of(batched), best_of(sequential)
+    # generous margin to keep CI stable; locally the gap is much larger
+    assert t_batch < t_seq, (t_batch, t_seq)
