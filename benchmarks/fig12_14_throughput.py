@@ -50,9 +50,56 @@ def _measured_step_traffic(sys: SystemSpec):
          "tok/s", "if the whole KV readback were one decode step")
 
 
+def _async_multistream_throughput(sys: SystemSpec):
+    """Model the paper's decode/fetch overlap with real device receipts:
+    the same per-step KV readback for several streams, once as serialized
+    sync submits (one request at a time, full request overhead each) and
+    once through the queued async front-end (one in-flight window, shared
+    pipes, overhead amortized).  Throughput = tokens serviced per modeled
+    second of tier I/O; async must dominate — that is the mechanism behind
+    Fig. 12's 16.28 → 68.99 tok/s at 128k."""
+    tokens, channels, streams, pages = 64, 512, 4, 16
+    sync_dev = make_device("trace", kv_window=tokens)
+    async_dev = make_device("trace", kv_window=tokens, window=128)
+    keys = [f"s{s}.ctx.{i}" for s in range(streams) for i in range(pages)]
+    for dev in (sync_dev, async_dev):
+        dev.submit([
+            WriteReq(k, synth.kv_cache(tokens, channels, seed=400 + i), kind=KV)
+            for i, k in enumerate(keys)
+        ])
+
+    # sync-sequential: each stream's pages read one submit at a time
+    t_sync = sum(
+        r.latency_s
+        for k in keys
+        for r in sync_dev.submit([ReadReq(k, kind=KV)])
+    )
+    # async: every stream enqueues before anyone drains (one shared window)
+    tickets = async_dev.submit_async([ReadReq(k, kind=KV) for k in keys])
+    recs = async_dev.drain(tickets)
+    t_async = max(r.latency_s for r in recs)   # overlap: last delivery
+    q_delay = sum(r.queue_delay_s for r in recs)
+
+    # One decode step per stream, each fetching its spilled context.  The
+    # small synthetic context keeps both designs above the compute cap, so
+    # report the *uncapped* tier-I/O ceiling — the quantity the queued
+    # front-end changes (compute overlap hides anything below the cap).
+    tok_s_sync = streams / t_sync
+    tok_s_async = streams / t_async
+    emit("fig12", "measured_sync_sequential_tok_s", tok_s_sync, "tok/s",
+         f"I/O-only ceiling, uncapped; {streams} streams x {pages} pages, "
+         "serialized submits")
+    emit("fig12", "measured_async_multistream_tok_s", tok_s_async, "tok/s",
+         "I/O-only ceiling, uncapped; same workload, one in-flight window")
+    emit("fig12", "measured_async_speedup", tok_s_async / tok_s_sync, "x",
+         f"queue delay {q_delay * 1e6:.2f} us across {len(recs)} receipts")
+    assert tok_s_async >= tok_s_sync, (tok_s_async, tok_s_sync)
+
+
 def run():
     sys = SystemSpec()
     _measured_step_traffic(sys)
+    _async_multistream_throughput(sys)
 
     # ---- Fig. 12 -------------------------------------------------------------
     m = gpt_oss_120b("mxfp4")

@@ -1,0 +1,105 @@
+"""Multi-stream serving over one shared tier device queue.
+
+Three demonstrations of the queued async front-end, smallest first:
+
+1. raw tickets  — submit_async / wait / drain on a TierStore, showing the
+   in-flight window, coalesced execution, and queue-delay receipts;
+2. overlap      — one ServeEngine with async_io on vs off: identical
+   tokens and traffic, but the async receipts price the decode/fetch
+   overlap (serialized service vs windowed completion);
+3. many streams — a MultiStreamEngine serving several sequences whose
+   page pools share ONE device queue, with per-stream traffic receipts
+   summing exactly to the shared device totals.
+
+Run: PYTHONPATH=src python examples/serve_async.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.core import synth
+from repro.core.tier import KV, ReadReq, WriteReq, make_device
+from repro.models.model import init_params
+from repro.runtime import MultiStreamEngine, ServeEngine
+from repro.runtime.paging import LOSSLESS_POLICY
+
+
+def raw_tickets():
+    print("== raw tickets on a TierStore (window = 4) ==")
+    dev = make_device("trace", kv_window=16, window=4)
+    dev.submit([
+        WriteReq(f"p{i}", synth.kv_cache(16, 64, seed=i), kind=KV)
+        for i in range(8)
+    ])
+    tickets = [dev.submit_async([ReadReq(f"p{i}", kind=KV)])[0]
+               for i in range(8)]
+    done = sum(t.done for t in tickets)
+    print(f"submitted 8 reads: {done} executed by window overflow, "
+          f"{dev.pending} still queued")
+    dev.drain(tickets)
+    # time one coalesced group: widen the window so all 8 reads flush as a
+    # single in-flight batch, then compare against serialized service
+    dev.window = 64
+    recs = dev.drain(dev.submit_async([ReadReq(f"p{i}", kind=KV)
+                                       for i in range(8)]))
+    total = max(r.latency_s for r in recs)     # one group: last delivery
+    serial = sum(r.service_s for r in recs)
+    print(f"one 8-read in-flight group: completion {total * 1e6:.2f} us vs "
+          f"serialized {serial * 1e6:.2f} us ({serial / total:.1f}x overlap "
+          "win)\n")
+
+
+def overlap_single_stream(cfg, params):
+    print("== one stream, async_io on vs off (lossless policy) ==")
+    prompt = (np.arange(48, dtype=np.int32) % cfg.vocab).reshape(1, 48)
+    rows = {}
+    for async_io in (False, True):
+        eng = ServeEngine(
+            cfg, params, max_seq=96, batch=1, page_tokens=16,
+            hbm_kv_budget=1 << 12, device_kind="trace",
+            policy=LOSSLESS_POLICY, async_io=async_io,
+        )
+        toks = eng.generate(prompt, 12)
+        rows[async_io] = (toks, eng.stats())
+    t_sync, s_sync = rows[False]
+    t_async, s_async = rows[True]
+    assert np.array_equal(t_sync, t_async), "async must not change tokens"
+    print(f"tokens identical; tier DRAM read {s_async.tier_dram_read} B "
+          f"(sync {s_sync.tier_dram_read} B)")
+    print(f"async I/O: serialized {s_async.tier_io_service_s * 1e6:.1f} us, "
+          f"queue delay {s_async.tier_io_queue_delay_s * 1e6:.1f} us\n")
+
+
+def many_streams(cfg, params, n=3):
+    print(f"== {n} streams sharing one device queue ==")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (1, 48)).astype(np.int32)
+               for _ in range(n)]
+    eng = MultiStreamEngine(
+        cfg, params, n, device_kind="trace", max_seq=96, batch=1,
+        page_tokens=16, hbm_kv_budget=1 << 12, policy=LOSSLESS_POLICY,
+    )
+    toks = eng.generate(prompts, 8)
+    d = eng.device_stats()
+    print(f"generated {[t.shape for t in toks]} tokens")
+    per_read = [
+        sum(t.dram_bytes_read for t in s.pool.page_traffic.values())
+        for s in eng.streams
+    ]
+    print(f"per-stream DRAM reads {per_read} B  (sum {sum(per_read)} B "
+          f"== device {d.dram_bytes_read} B)")
+    assert sum(per_read) == d.dram_bytes_read
+    print(f"aggregate tok/s ceiling: {eng.throughput_ceiling():.1f}")
+
+
+def main():
+    raw_tickets()
+    cfg = smoke_config(ARCHS["qwen2-0.5b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    overlap_single_stream(cfg, params)
+    many_streams(cfg, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ from .tier import (
     PlainDevice,
     ReadReq,
     Receipt,
+    Ticket,
     TierStore,
     TraceDevice,
     WriteReq,
@@ -20,5 +21,5 @@ __all__ = [
     "precision", "system_model", "tier",
     "PrecisionView", "FULL", "MAN4", "MAN2", "MAN0", "VIEWS",
     "PlainDevice", "GCompDevice", "TraceDevice", "TierStore", "make_device",
-    "WriteReq", "ReadReq", "Receipt",
+    "WriteReq", "ReadReq", "Receipt", "Ticket",
 ]

@@ -37,6 +37,38 @@ Legacy shims (``write_tensor`` / ``read_tensor`` / ``write_kv`` /
 ``read_kv`` / ``flush_kv``) forward to :meth:`TierStore.submit` and are
 kept so existing call sites keep working; new code should submit request
 batches directly.
+
+Asynchronous submission (the queued front-end):
+
+``submit_async(requests) -> list[Ticket]`` enqueues a batch without
+executing the reads.  Writes are *posted* — they commit immediately, in
+listed order, exactly as :meth:`TierStore.submit` would — while reads
+enter a bounded in-flight window (``window`` requests).  The scheduler
+executes queued reads as coalesced groups: when the window fills, when a
+:meth:`Ticket.wait` / :meth:`TierStore.drain` forces completion, or when
+a hazard demands it.  A group decodes through the same vectorized
+batched-read path as a sync batch, so reads from *different*
+``submit_async`` calls coalesce into one slab decode.
+
+Ordering semantics (these make async execution byte-identical to sync):
+
+* within one ``submit_async`` call, writes post before reads enqueue —
+  the same writes-drain-first rule as a single ``submit`` batch;
+* across calls, program order is preserved per key: posting a write to a
+  key with queued reads first flushes the queue (write-after-read
+  fence), and ``submit`` / ``delete`` flush the queue before touching
+  device state, so a late sync caller never observes stale ordering;
+* queued reads execute in submission order (groups are queue prefixes),
+  so index-cache hit/miss accounting is identical to the sync path.
+
+Receipts from queued reads additionally carry ``queue_delay_s`` (time
+spent behind earlier requests of the same flush group on the shared
+DDR + link pipes) and an overlap-adjusted ``latency_s`` from
+:class:`LinkModel.schedule` — the fixed request overhead is paid once
+per group and transfers pipeline, which is what makes a drained batch
+faster than the sum of serialized sync requests (the paper's decode /
+fetch overlap at 128k context).  ``service_s`` keeps the serialized
+service time for comparison.
 """
 
 from __future__ import annotations
@@ -128,7 +160,9 @@ class Receipt:
     index_bytes: int = 0
     index_hits: int = 0
     index_misses: int = 0
-    latency_s: float = 0.0
+    latency_s: float = 0.0        # delivery time: queue_delay_s + service
+    queue_delay_s: float = 0.0    # wait behind earlier in-flight requests
+    service_s: float = 0.0        # serialized service time (sync latency)
     data: Optional[np.ndarray] = None
 
     @property
@@ -151,6 +185,30 @@ class LinkModel:
     def latency(self, dram_bytes: int, link_bytes: int) -> float:
         return self.base_s + max(dram_bytes / self.ddr_bw,
                                  link_bytes / self.link_bw)
+
+    def schedule(
+        self, traffic: Sequence[Tuple[int, int]]
+    ) -> List[Tuple[float, float]]:
+        """Completion model for one in-flight group sharing DDR + link.
+
+        ``traffic`` is ordered ``(dram_bytes, link_bytes)`` per request.
+        Request *i* is delivered once both pipes have moved its cumulative
+        bytes; the fixed request overhead is paid once per group.  Returns
+        ``(queue_delay_s, latency_s)`` per request, where ``latency_s`` is
+        the delivery time measured from group issue and ``queue_delay_s``
+        is that minus the request's own serialized service time — i.e. the
+        wait behind earlier requests on the occupied pipes.
+        """
+        out: List[Tuple[float, float]] = []
+        cum_dram = cum_link = 0
+        for dram, link in traffic:
+            service = self.latency(dram, link)
+            cum_dram += dram
+            cum_link += link
+            done = self.base_s + max(cum_dram / self.ddr_bw,
+                                     cum_link / self.link_bw)
+            out.append((max(done - service, 0.0), done))
+        return out
 
 
 @dataclasses.dataclass
@@ -416,6 +474,53 @@ LAYOUTS = {
 
 
 # ---------------------------------------------------------------------------
+# Async submission — tickets over a bounded in-flight window
+# ---------------------------------------------------------------------------
+
+class Ticket:
+    """Handle to one request submitted through :meth:`TierStore.submit_async`.
+
+    Posted writes complete at submission, so their tickets are born done.
+    Read tickets complete when the scheduler flushes their in-flight group
+    (window overflow, hazard fence, :meth:`wait` or :meth:`drain`).
+    ``wait()`` is idempotent: it forces execution of the queue prefix up to
+    this ticket on first call and returns the same :class:`Receipt` (or
+    re-raises the same error) on every call.
+    """
+
+    __slots__ = ("request", "_store", "_receipt", "_error")
+
+    def __init__(self, store: "TierStore", request: Request):
+        self._store = store
+        self.request = request
+        self._receipt: Optional[Receipt] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._receipt is not None or self._error is not None
+
+    def _complete(self, receipt: Receipt):
+        self._receipt = receipt
+
+    def _fail(self, error: BaseException):
+        self._error = error
+
+    def wait(self) -> Receipt:
+        if not self.done:
+            self._store._flush_through(self)
+        if self._error is not None:
+            raise self._error
+        assert self._receipt is not None
+        return self._receipt
+
+    def __repr__(self):
+        state = ("done" if self._receipt is not None
+                 else "failed" if self._error is not None else "pending")
+        return f"Ticket({self.request.key!r}, {state})"
+
+
+# ---------------------------------------------------------------------------
 # TierStore — the host↔device boundary
 # ---------------------------------------------------------------------------
 
@@ -432,31 +537,27 @@ class TierStore:
     def __init__(self, layout: Union[Layout, str] = "word",
                  codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
                  index_cache_entries: int = 4096, kv_window: int = 64,
-                 link_model: LinkModel = LinkModel()):
+                 link_model: LinkModel = LinkModel(), window: int = 64):
         self.layout = LAYOUTS[layout]() if isinstance(layout, str) else layout
         self.codec = codecs.resolve_codec(codec)
         self.block_elems = block_elems
         self.kv_window = kv_window
         self.link_model = link_model
+        self.window = window                 # max queued (in-flight) reads
         self.stats = DeviceStats()
         self._tensors: Dict[str, List[_Block]] = {}
         self._shapes: Dict[str, tuple] = {}
         self._kv_staging: Dict[str, list] = {}   # stream → [token rows]
         self._kv_channels: Dict[str, int] = {}
         self._index = _IndexCache(index_cache_entries)
+        self._queue: List[Ticket] = []       # pending read tickets, FIFO
 
-    # -- batched entry point -------------------------------------------------
-    def submit(self, requests: Sequence[Request]) -> List[Receipt]:
-        """Execute a request batch; one receipt per request, in order.
-
-        Reads across the batch are decoded together (grouped by precision
-        view) so plane unpacking and reconstruction run as a few vectorized
-        numpy passes instead of one per 4 KB block.
-        """
-        # Validate the whole batch BEFORE mutating any device state, so a
-        # malformed request cannot leave committed blocks unaccounted.
-        # Reads may target any key written anywhere in the batch: writes
-        # drain before reads regardless of listed order.
+    # -- validation (shared by submit / submit_async) -------------------------
+    def _validate(self, requests: Sequence[Request]):
+        """Reject a malformed batch BEFORE mutating any device state, so a
+        bad request cannot leave committed blocks unaccounted.  Reads may
+        target any key written anywhere in the same batch: writes drain
+        before reads regardless of listed order."""
         written = {req.key for req in requests if isinstance(req, WriteReq)}
         for req in requests:
             if isinstance(req, WriteReq):
@@ -474,20 +575,26 @@ class TierStore:
                     raise KeyError(req.key)
             else:
                 raise TypeError(f"not a tier request: {req!r}")
+
+    # -- batched entry point -------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> List[Receipt]:
+        """Execute a request batch; one receipt per request, in order.
+
+        Reads across the batch are decoded together (grouped by precision
+        view) so plane unpacking and reconstruction run as a few vectorized
+        numpy passes instead of one per 4 KB block.  Any queued async reads
+        drain first, so sync callers always observe program order.
+        """
+        self._validate(requests)
+        if self._queue:
+            self._flush_queue(len(self._queue))
         receipts: List[Receipt] = [None] * len(requests)  # type: ignore
         # Writes execute in order first so reads in the same batch observe
         # them (single-queue device semantics).
         read_ix: List[int] = []
         for i, req in enumerate(requests):
             if isinstance(req, WriteReq):
-                rec = Receipt(key=req.key, op="write", kind=req.kind,
-                              tag=req.tag)
-                receipts[i] = rec
-                try:
-                    self._do_write(req, rec)
-                finally:
-                    # even on failure, whatever was committed stays counted
-                    self.stats.apply(rec)
+                receipts[i] = self._post_write(req)
             else:
                 read_ix.append(i)
         if read_ix:
@@ -495,7 +602,106 @@ class TierStore:
                 receipts[i] = r
         return receipts
 
+    # -- async entry point ---------------------------------------------------
+    def submit_async(self, requests: Sequence[Request]) -> List[Ticket]:
+        """Enqueue a request batch; one :class:`Ticket` per request, in order.
+
+        Writes are posted — committed immediately, in listed order — so
+        their tickets are born complete.  Reads enter the bounded in-flight
+        window and execute later as coalesced groups (window overflow,
+        ``wait``/``drain``, or a write-after-read fence on their key).  As
+        in :meth:`submit`, the call's writes post before its reads enqueue,
+        which makes ``submit_async`` + :meth:`drain` receipt- and
+        byte-identical to one sync ``submit`` of the same batch.
+        """
+        self._validate(requests)
+        writes = [r for r in requests if isinstance(r, WriteReq)]
+        # Write-after-read fence: posting a write over queued reads of the
+        # same key would let those reads observe data from their future.
+        # Flush the queue first (groups are prefixes, so order holds).
+        if writes:
+            hot = {w.key for w in writes}
+            if any(t.request.key in hot for t in self._queue):
+                self._flush_queue(len(self._queue))
+        tickets: Dict[int, Ticket] = {}
+        for i, req in enumerate(requests):
+            if isinstance(req, WriteReq):
+                t = Ticket(self, req)
+                t._complete(self._post_write(req))
+                tickets[i] = t
+        for i, req in enumerate(requests):
+            if i not in tickets:
+                if len(self._queue) >= self.window:
+                    self._flush_queue(len(self._queue))
+                t = Ticket(self, req)
+                self._queue.append(t)
+                tickets[i] = t
+        return [tickets[i] for i in range(len(requests))]
+
+    @property
+    def pending(self) -> int:
+        """Queued (not yet executed) read requests in the in-flight window."""
+        return len(self._queue)
+
+    def drain(self, tickets: Optional[Sequence[Ticket]] = None) -> List[Receipt]:
+        """Execute everything still queued and return receipts in order.
+
+        With ``tickets``, returns exactly those tickets' receipts (waiting
+        on each); otherwise returns the receipts of the reads that were
+        pending at call time.  Re-raises the first failed ticket's error.
+        """
+        waiting = list(tickets) if tickets is not None else list(self._queue)
+        if self._queue:
+            self._flush_queue(len(self._queue))
+        return [t.wait() for t in waiting]
+
+    def _flush_through(self, ticket: Ticket):
+        """Execute the queue prefix up to and including ``ticket``."""
+        try:
+            n = self._queue.index(ticket) + 1
+        except ValueError:
+            return                       # completed (or failed) elsewhere
+        self._flush_queue(n)
+
+    def _flush_queue(self, n: int):
+        """Execute the first ``n`` queued reads as one coalesced group.
+
+        The group goes through the same vectorized batched-read path as a
+        sync batch; receipts then get queue-delay / overlap-adjusted
+        latency from :meth:`LinkModel.schedule`.  On failure every ticket
+        of the group records the error (stats for whatever committed stay
+        applied by ``_do_reads``) and the error propagates.
+        """
+        group, self._queue = self._queue[:n], self._queue[n:]
+        if not group:
+            return
+        try:
+            recs = self._do_reads([t.request for t in group])
+        except BaseException as e:
+            for t in group:
+                t._fail(e)
+            raise
+        times = self.link_model.schedule(
+            [(r.dram_bytes_read, r.link_bytes_out) for r in recs]
+        )
+        for t, r, (delay, done) in zip(group, recs, times):
+            r.queue_delay_s = delay
+            r.latency_s = done
+            t._complete(r)
+
     # -- write path ----------------------------------------------------------
+    def _post_write(self, req: WriteReq) -> Receipt:
+        """Execute one write and apply its receipt to the aggregate — the
+        single posting path shared by ``submit`` and ``submit_async``, so
+        the sync/async receipt-identity invariant cannot drift."""
+        rec = Receipt(key=req.key, op="write", kind=req.kind, tag=req.tag)
+        try:
+            self._do_write(req, rec)
+        finally:
+            # even on failure, whatever was committed stays counted
+            self.stats.apply(rec)
+        return rec
+
     def _do_write(self, req: WriteReq, rec: Receipt) -> Receipt:
         data = np.ascontiguousarray(req.data, dtype=np.uint16)
         rec.link_bytes_in += data.size * 2
@@ -517,7 +723,7 @@ class TierStore:
                         self._commit_kv_window(rec, req.key)
                 if req.flush and buf:
                     self._commit_kv_window(rec, req.key)
-        rec.latency_s = self.link_model.latency(
+        rec.service_s = rec.latency_s = self.link_model.latency(
             rec.dram_bytes_written, rec.link_bytes_in
         )
         return rec
@@ -602,7 +808,7 @@ class TierStore:
             # (paper Issue 2); plane-aligned layouts return the view's bits.
             bits = req.view.bits if self.layout.plane_aligned else BF16_BITS
             rec.link_bytes_out += rec.data.size * bits // 8
-            rec.latency_s = self.link_model.latency(
+            rec.service_s = rec.latency_s = self.link_model.latency(
                 rec.dram_bytes_read, rec.link_bytes_out
             )
             out.append(rec)
@@ -644,6 +850,10 @@ class TierStore:
         return sum(b.valid_elems for b in self._tensors[key]) * 2
 
     def delete(self, key: str):
+        # In-flight reads were issued against the key's current mapping;
+        # complete them before the mapping disappears.
+        if self._queue:
+            self._flush_queue(len(self._queue))
         for b in self._tensors.pop(key, []):
             self.stats.dram_bytes_stored -= b.stored_bytes
             self.stats.raw_bytes_stored -= b.valid_elems * 2
@@ -668,6 +878,10 @@ class TierStore:
 
     def flush_kv(self, stream: str):
         if self._kv_staging.get(stream):
+            # sync entry point: queued reads observe program order (they
+            # would otherwise absorb this commit into their own receipts)
+            if self._queue:
+                self._flush_queue(len(self._queue))
             rec = Receipt(key=stream, op="write", kind=KV)
             self._commit_kv_window(rec, stream)
             self.stats.apply(rec)

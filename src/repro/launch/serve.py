@@ -2,11 +2,14 @@
 
 Runs a (reduced or full) model with the ServeEngine, reporting tier traffic,
 KV compression ratio, and the implied tok/s ceiling for each device kind —
-the end-to-end integration of the paper's two mechanisms.
+the end-to-end integration of the paper's two mechanisms.  Spill readback
+goes through the tier's queued async front-end by default (``--sync-io``
+reverts to serialized submits); ``--streams N`` serves N sequences that
+share one device queue.
 
 Usage (CPU demo):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-      --tokens 64 --device trace
+      --tokens 64 --device trace --streams 2
 """
 
 from __future__ import annotations
@@ -18,7 +21,7 @@ import numpy as np
 
 from ..configs import ARCHS, smoke_config
 from ..models.model import init_params
-from ..runtime import PAPER_POLICY, ServeEngine
+from ..runtime import MultiStreamEngine, PAPER_POLICY, ServeEngine
 from ..runtime.paging import LOSSLESS_POLICY
 
 
@@ -32,30 +35,55 @@ def serve(
     hbm_kv_budget: int = 1 << 12,   # tiny on purpose → force KV spill to tier
     page_tokens: int = 16,
     lossless_only: bool = False,
+    streams: int = 1,
+    async_io: bool = True,
     seed: int = 0,
 ):
     cfg = ARCHS[arch]
     if smoke:
         cfg = smoke_config(cfg)
     params = init_params(cfg, jax.random.PRNGKey(seed))
-    eng = ServeEngine(
-        cfg, params,
+    policy = LOSSLESS_POLICY if lossless_only else PAPER_POLICY
+    kw = dict(
         max_seq=prompt_len + n_tokens + page_tokens,
         batch=batch,
         page_tokens=page_tokens,
         hbm_kv_budget=hbm_kv_budget,
-        device_kind=device,
-        policy=LOSSLESS_POLICY if lossless_only else PAPER_POLICY,
+        policy=policy,
+        async_io=async_io,
     )
     rng = np.random.default_rng(seed)
+    if streams > 1:
+        eng = MultiStreamEngine(cfg, params, streams, device_kind=device, **kw)
+        prompts = [
+            rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+            for _ in range(streams)
+        ]
+        toks = eng.generate(prompts, n_tokens)
+        per = eng.stats()
+        d = eng.device_stats()
+        print(f"[serve] arch={arch} device={device} streams={streams} "
+              f"async_io={async_io} generated {[t.shape for t in toks]}")
+        print(f"[serve] shared tier: stored {d.dram_bytes_stored} B, "
+              f"DRAM read {d.dram_bytes_read} B, link out {d.link_bytes_out} B")
+        io_srv = sum(s.tier_io_service_s for s in per)
+        io_qd = sum(s.tier_io_queue_delay_s for s in per)
+        print(f"[serve] tier I/O: serialized {io_srv * 1e3:.3f} ms, "
+              f"queue delay {io_qd * 1e3:.3f} ms")
+        print(f"[serve] aggregate tok/s ceiling: {eng.throughput_ceiling():.1f}")
+        return eng, toks
+    eng = ServeEngine(cfg, params, device_kind=device, **kw)
     prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     toks = eng.generate(prompt, n_tokens)
     s = eng.stats()
-    print(f"[serve] arch={arch} device={device} generated {toks.shape} tokens")
+    print(f"[serve] arch={arch} device={device} async_io={async_io} "
+          f"generated {toks.shape} tokens")
     print(f"[serve] spilled pages: {s.spilled_pages}, "
           f"tier stored {s.tier_dram_stored} B for {s.kv_logical_bytes} B logical "
           f"(ratio {s.kv_compression_ratio:.2f}x)")
     print(f"[serve] tier DRAM read {s.tier_dram_read} B, link out {s.tier_link_out} B")
+    print(f"[serve] tier I/O: serialized {s.tier_io_service_s * 1e3:.3f} ms, "
+          f"queue delay {s.tier_io_queue_delay_s * 1e3:.3f} ms")
     print(f"[serve] tok/s ceiling (tier-bound): {eng.throughput_ceiling():.1f}")
     return eng, toks
 
@@ -68,10 +96,15 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--streams", type=int, default=1,
+                    help="sequences sharing one tier device queue")
+    ap.add_argument("--sync-io", action="store_true",
+                    help="serialize spill readback (disable the async queue)")
     ap.add_argument("--lossless-only", action="store_true")
     args = ap.parse_args()
     serve(arch=args.arch, device=args.device, n_tokens=args.tokens,
           prompt_len=args.prompt_len, batch=args.batch,
+          streams=args.streams, async_io=not args.sync_io,
           lossless_only=args.lossless_only)
 
 

@@ -1,6 +1,6 @@
 from .paging import KVPagePool, PagePolicy, PAPER_POLICY
-from .serving import ServeEngine, ServeStats
+from .serving import MultiStreamEngine, ServeEngine, ServeStats
 from .weights import WeightStore
 
-__all__ = ["KVPagePool", "PagePolicy", "PAPER_POLICY", "ServeEngine",
-           "ServeStats", "WeightStore"]
+__all__ = ["KVPagePool", "PagePolicy", "PAPER_POLICY", "MultiStreamEngine",
+           "ServeEngine", "ServeStats", "WeightStore"]

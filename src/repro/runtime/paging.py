@@ -30,7 +30,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.precision import FULL, MAN0, MAN4, PrecisionView
-from ..core.tier import KV, ReadReq, Receipt, TierStore, WriteReq, make_device
+from ..core.tier import (
+    KV, ReadReq, Receipt, Ticket, TierStore, WriteReq, make_device,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,15 +109,23 @@ class KVPagePool:
         page_tokens: int = 64,
         hbm_budget_bytes: int = 1 << 30,
         policy: PagePolicy = PAPER_POLICY,
+        key_prefix: str = "",
     ):
         self.device = make_device(device) if isinstance(device, str) else device
         self.page_tokens = page_tokens
         self.hbm_budget = hbm_budget_bytes
         self.policy = policy
+        self.key_prefix = key_prefix        # stream namespace on a shared device
         self._pages: List[_Page] = []
         self._hbm_used = 0
         self.spill_events: List[_Page] = []   # drained by the serving engine
         self.page_traffic: Dict[str, PageTraffic] = {}
+        # key → [Ticket, view-at-issue, Receipt | None]; the receipt slot
+        # memoizes exactly-once accounting (see _settle_prefetch)
+        self._prefetched: Dict[str, list] = {}
+        # I/O latency roll-up from this pool's receipts (simulated seconds).
+        self.io_service_s = 0.0       # serialized service time
+        self.io_queue_delay_s = 0.0   # time spent queued behind other I/O
         # One page per KV window: the device commits each page's stream in
         # a single transform window.
         self.device.kv_window = page_tokens
@@ -123,6 +133,8 @@ class KVPagePool:
     def _account(self, receipts: Sequence[Receipt]):
         for r in receipts:
             self.page_traffic.setdefault(r.key, PageTraffic()).add(r)
+            self.io_service_s += r.service_s
+            self.io_queue_delay_s += r.queue_delay_s
 
     def traffic_by_layer(self) -> Dict[int, PageTraffic]:
         """Aggregate per-page traffic up to layers (key format L{n}.*)."""
@@ -137,7 +149,7 @@ class KVPagePool:
     def append_page(self, layer: int, kind: str, start: int,
                     tokens_u16: np.ndarray, importance: float = 0.0):
         """Commit one full page (token-major (n, C) uint16)."""
-        key = f"L{layer}.{kind}.{start}"
+        key = f"{self.key_prefix}L{layer}.{kind}.{start}"
         page = _Page(key, layer, kind, start, tokens_u16.shape[0],
                      importance=importance)
         # Always admit to HBM first, then evict the least-important pages
@@ -166,7 +178,10 @@ class KVPagePool:
             p.resident = None
             self.spill_events.append(p)
         if writes:
-            self._account(self.device.submit(writes))
+            # Post through the async front-end: spill writes commit eagerly
+            # either way, but submit_async leaves queued readback/prefetch
+            # tickets in flight instead of forcing them to drain.
+            self._account([t.wait() for t in self.device.submit_async(writes)])
 
     def update_importance(self, scores: Dict[str, float]):
         for p in self._pages:
@@ -187,35 +202,128 @@ class KVPagePool:
         """One spilled page through the tier at its current policy view."""
         return self.read_pages([page])[0]
 
-    def read_pages(self, pages: Sequence[_Page]) -> List[np.ndarray]:
-        """Batched tier read of spilled pages (one submit for the batch)."""
+    def _page_reqs(self, pages: Sequence[_Page]) -> List[ReadReq]:
         rank = self._spill_ranks()
-        reqs = [
+        return [
             ReadReq(p.key, kind=KV, view=self.policy.view_for_rank(rank[p.key]),
                     tag=p.key)
             for p in pages
         ]
-        receipts = self.device.submit(reqs)
+
+    def read_pages(self, pages: Sequence[_Page]) -> List[np.ndarray]:
+        """Batched tier read of spilled pages (one submit for the batch)."""
+        receipts = self.device.submit(self._page_reqs(pages))
         self._account(receipts)
         return [r.data for r in receipts]
 
+    def read_pages_async(self, pages: Sequence[_Page]) -> List[Ticket]:
+        """Issue spill-readback tickets for ``pages`` without waiting.
+
+        The reads join the device's in-flight window (coalescing with any
+        other stream's queued reads) and execute when the window fills or
+        :meth:`drain_reads` forces completion — the serving engine calls
+        that at the next commit boundary, after the jitted decode step the
+        tickets overlapped with.  Views are fixed at issue time from the
+        current spill ranks, so a later drain reads the same bytes a sync
+        read here would have.
+        """
+        return self.device.submit_async(self._page_reqs(pages))
+
+    def drain_reads(self, tickets: Sequence[Ticket]) -> List[np.ndarray]:
+        """Wait on readback tickets, folding receipts into pool traffic.
+
+        If any waited ticket is still queued, this drains the device's
+        WHOLE in-flight window, not just these tickets' queue prefix: when
+        several streams share one device, the first stream to reach its
+        commit boundary flushes every stream's queued reads as one
+        coalesced group (cross-stream slab decode, shared-pipe queue-delay
+        pricing).  Pools whose tickets were completed by someone else's
+        drain just collect receipts without touching the queue — so they
+        never prematurely flush tickets issued after theirs.
+        """
+        if not tickets:
+            return []
+        if any(not t.done for t in tickets):
+            receipts = self.device.drain(tickets)
+        else:
+            receipts = [t.wait() for t in tickets]
+        self._account(receipts)
+        return [r.data for r in receipts]
+
+    def prefetch_layer(self, layer: int, kind: str) -> int:
+        """Issue async read tickets for (layer, kind)'s spilled pages so a
+        following :meth:`read_layer` is served from the in-flight window.
+        Returns the number of tickets issued (0 if everything is resident
+        or already in flight)."""
+        subset = [p for p in self._pages
+                  if p.layer == layer and p.kind == kind]
+        pages = [p for p in subset
+                 if p.resident is None and p.key not in self._prefetched]
+        if not pages:
+            return 0
+        # Rank within the (layer, kind) subset — the same basis read_layer
+        # will use — so the issued views match and the prefetch is consumed
+        # rather than discarded and re-read.
+        rank = self._spill_ranks(subset)
+        views = {p.key: self.policy.view_for_rank(rank[p.key]) for p in pages}
+        reqs = [ReadReq(p.key, kind=KV, view=views[p.key], tag=p.key)
+                for p in pages]
+        for p, t in zip(pages, self.device.submit_async(reqs)):
+            # entry: [ticket, view_at_issue, receipt-once-accounted]
+            self._prefetched[p.key] = [t, views[p.key], None]
+        return len(pages)
+
+    def _settle_prefetch(self, entry) -> Receipt:
+        """Wait a prefetch ticket, folding its receipt into the pool's
+        accounting exactly once (idempotent across settle/consume)."""
+        if entry[2] is None:
+            entry[2] = entry[0].wait()
+            self._account([entry[2]])
+        return entry[2]
+
+    def settle_prefetched(self):
+        """Account every prefetch ticket the device has already executed.
+
+        A prefetch can be flushed by unrelated traffic (window overflow,
+        another stream's sync read) before its ``read_layer`` arrives; its
+        bytes are then in ``device.stats`` but not yet in this pool's
+        receipts.  Settling keeps the receipts-sum == device-stats
+        conservation invariant without forcing pending tickets to execute
+        (a still-queued prefetch is counted on neither side).  The settled
+        data stays available for a later :meth:`read_layer`.
+        """
+        for entry in self._prefetched.values():
+            if entry[0].done and entry[2] is None:
+                self._settle_prefetch(entry)
+
     def read_layer(self, layer: int, kind: str) -> np.ndarray:
         """Gather all pages of (layer, kind) in token order, applying the
-        precision policy to spilled pages (ranked by importance).  All
-        spilled pages go to the device as one request batch."""
+        precision policy to spilled pages (ranked by importance).  Spilled
+        pages come from matching prefetch tickets when available; the rest
+        go to the device as one request batch."""
         pages = sorted(
             (p for p in self._pages if p.layer == layer and p.kind == kind),
             key=lambda p: p.start,
         )
         rank = self._spill_ranks(pages)
-        reqs = [
-            ReadReq(p.key, kind=KV, view=self.policy.view_for_rank(rank[p.key]),
-                    tag=p.key)
-            for p in pages if p.resident is None
-        ]
-        rs = self.device.submit(reqs)
+        served: Dict[str, np.ndarray] = {}
+        reqs = []
+        for p in pages:
+            if p.resident is not None:
+                continue
+            view = self.policy.view_for_rank(rank[p.key])
+            pf = self._prefetched.pop(p.key, None)
+            if pf is not None:
+                rec = self._settle_prefetch(pf)
+                if pf[1] == view:
+                    served[p.key] = rec.data
+                    continue
+                # rank drifted since prefetch: traffic stays accounted,
+                # data is re-read at the now-correct view
+            reqs.append(ReadReq(p.key, kind=KV, view=view, tag=p.key))
+        rs = self.device.submit(reqs) if reqs else []
         self._account(rs)
-        served = {r.key: r.data for r in rs}
+        served.update({r.key: r.data for r in rs})
         out = [p.resident if p.resident is not None else served[p.key]
                for p in pages]
         return np.concatenate(out, axis=0) if out else np.empty((0, 0), np.uint16)
@@ -230,4 +338,5 @@ class KVPagePool:
         return sum(1 for p in self._pages if p.resident is None)
 
     def stats(self):
+        self.settle_prefetched()
         return self.device.stats

@@ -1,0 +1,36 @@
+"""Shared test fixtures.
+
+``smoke_model`` builds a smoke-config model ONCE per session and caches it
+by (arch, seed): the model-forward modules (serving, kv-dtype) used to
+re-init params and re-trace jit per module, which dominated the tier-1
+wall clock.  Model-forward tests are also marked ``slow`` (registered in
+pyproject.toml) so local iteration can run ``-m "not slow"``; the full
+suite still runs everything by default.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smoke_model():
+    """Factory: ``smoke_model(name, seed)`` → cached ``(cfg, params)``.
+
+    ``cfg`` is the smoke-reduced arch config; callers that need variant
+    configs (e.g. a different ``kv_dtype``) should ``dataclasses.replace``
+    the returned cfg — params do not depend on cache dtype, so they can be
+    shared across variants.
+    """
+    from repro.configs import ARCHS, smoke_config
+    from repro.models.model import init_params
+
+    cache = {}
+
+    def get(name="qwen2-0.5b", seed=0):
+        key = (name, seed)
+        if key not in cache:
+            cfg = smoke_config(ARCHS[name])
+            cache[key] = (cfg, init_params(cfg, jax.random.PRNGKey(seed)))
+        return cache[key]
+
+    return get

@@ -13,6 +13,8 @@ from repro.models import (
 )
 from repro.optim import AdamWConfig, init as opt_init, update as opt_update
 
+pytestmark = pytest.mark.slow   # model-forward module
+
 B, S = 2, 32
 
 

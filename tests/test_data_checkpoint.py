@@ -81,6 +81,7 @@ def test_no_partial_checkpoint_visible(tmp_path):
     assert mgr.steps() == []
 
 
+@pytest.mark.slow   # full train loop (model forward + backward)
 def test_train_restart_bitexact(tmp_path):
     """9 steps straight == 6 steps + restart + 3 steps (fault tolerance)."""
     from repro.launch.train import train

@@ -15,6 +15,8 @@ from repro.models import layers as L
 from repro.models.model import init_params
 from repro.models.sharding import MeshRules, use_rules
 
+pytestmark = pytest.mark.slow   # model-forward module
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -12,6 +12,8 @@ from repro.launch.pipeline import make_pp_prefill_step
 from repro.models import forward
 from repro.models.model import init_params
 
+pytestmark = pytest.mark.slow   # model-forward module
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -7,7 +7,11 @@
    (the paper's §III-D correctness invariant);
 5. precision views: reconstruction only keeps kept-planes bits, guard
    rounding never moves a value by more than one ULP at the cut;
-6. plane-aligned DRAM bytes are monotone in the view's plane count.
+6. plane-aligned DRAM bytes are monotone in the view's plane count;
+7. ANY interleaving of writes / sync reads / async reads, on any layout
+   and any in-flight window size, returns the same bytes and the same
+   total ``DeviceStats`` as a sync-only device (the async queue is
+   semantically invisible).
 """
 
 import numpy as np
@@ -24,7 +28,7 @@ from repro.core.kv_transform import (
 from repro.core.precision import (
     EXP_BITS, MAN_BITS, PrecisionView, truncate_reference, view_dram_bytes,
 )
-from repro.core.tier import make_device
+from repro.core.tier import LAYOUTS, make_device
 
 u16s = st.integers(min_value=0, max_value=0xFFFF)
 
@@ -122,3 +126,42 @@ def test_view_bytes_monotone(r1, r2):
     v1 = PrecisionView(r_m=min(r1, r2))
     v2 = PrecisionView(r_m=max(r1, r2))
     assert view_dram_bytes(4096, v1) <= view_dram_bytes(4096, v2)
+
+
+# ---------------------------------------------------------------------------
+# async queue: random interleavings are semantically invisible
+# ---------------------------------------------------------------------------
+
+@st.composite
+def tier_programs(draw, n_keys=3, max_ops=14):
+    """Program-order op sequences for ``run_interleaving_differential``:
+    KV writes ("w"), tensor writes ("wt"), sync reads ("r") and async
+    reads ("ra"), reads only over keys written earlier."""
+    ops, written = [], []
+    for _ in range(draw(st.integers(4, max_ops))):
+        if not written or draw(st.booleans()):
+            if draw(st.booleans()):
+                key = f"k{draw(st.integers(0, n_keys - 1))}"
+                ops.append(("w", key, draw(st.integers(0, 999)),
+                            draw(st.integers(1, 3)) * 8))
+            else:
+                key = f"t{draw(st.integers(0, n_keys - 1))}"
+                ops.append(("wt", key, draw(st.integers(0, 999)),
+                            draw(st.integers(1, 4)) * 512))
+            written.append(ops[-1][1])
+        else:
+            ops.append((draw(st.sampled_from(["r", "ra"])),
+                        draw(st.sampled_from(written))))
+    return ops
+
+
+@given(tier_programs(), st.sampled_from(sorted(LAYOUTS)), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_async_interleavings_never_change_bytes_or_stats(ops, layout, window):
+    """Replaying any write/read/async-read interleaving through the queued
+    front-end returns byte-identical data and identical DeviceStats totals
+    vs a sync-only device — for every layout and window size."""
+    from test_tier_async import run_interleaving_differential
+
+    run_interleaving_differential(ops=ops, layout=layout,
+                                  kv_window=8, window=window)

@@ -1,28 +1,28 @@
-"""Serving runtime: paged KV spill → tier round-trip → decode integrity."""
+"""Serving runtime: paged KV spill → tier round-trip → decode integrity,
+sync and async I/O, single- and multi-stream."""
 
-import jax
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, smoke_config
 from repro.core.precision import FULL
-from repro.models.model import init_params
-from repro.runtime import PAPER_POLICY, KVPagePool, ServeEngine
+from repro.runtime import (
+    MultiStreamEngine, PAPER_POLICY, KVPagePool, ServeEngine,
+)
 from repro.runtime.paging import LOSSLESS_POLICY, PagePolicy
+
+pytestmark = pytest.mark.slow   # model-forward module
 
 
 @pytest.fixture(scope="module")
-def engine_pair():
-    """Two engines, lossless-TRACE vs plain, same params/prompt."""
-    cfg = smoke_config(ARCHS["qwen2-0.5b"])
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, params
+def engine_pair(smoke_model):
+    """Smoke cfg + params shared across the serving tests."""
+    return smoke_model("qwen2-0.5b")
 
 
-def _run(cfg, params, device, policy, n=12, budget=1 << 12):
+def _run(cfg, params, device, policy, n=12, budget=1 << 12, **kw):
     eng = ServeEngine(
         cfg, params, max_seq=96, batch=1, page_tokens=16,
-        hbm_kv_budget=budget, device_kind=device, policy=policy,
+        hbm_kv_budget=budget, device_kind=device, policy=policy, **kw,
     )
     prompt = np.arange(48, dtype=np.int32).reshape(1, 48) % cfg.vocab
     toks = eng.generate(prompt, n)
@@ -94,3 +94,70 @@ def test_policy_rank_views():
     assert views[5:8] == ["man4"] * 3
     assert views[8:] == ["man0"] * 4
     assert pol.avg_bits(10) == (5 * 16 + 3 * 13 + 2 * 9) / 10
+
+
+# ---------------------------------------------------------------------------
+# async I/O overlap + multi-stream serving
+# ---------------------------------------------------------------------------
+
+def test_async_io_matches_sync_engine_lossless(engine_pair):
+    """With lossless readback, overlapping spill I/O with decode must not
+    change a single token, and total tier traffic must match the
+    serialized engine exactly (only latency accounting differs)."""
+    cfg, params = engine_pair
+    e_sync, t_sync = _run(cfg, params, "trace", LOSSLESS_POLICY,
+                          async_io=False)
+    e_async, t_async = _run(cfg, params, "trace", LOSSLESS_POLICY,
+                            async_io=True)
+    np.testing.assert_array_equal(t_sync, t_async)
+    ss, sa = e_sync.stats(), e_async.stats()
+    assert (ss.tier_dram_read, ss.tier_link_out, ss.tier_dram_stored) == \
+        (sa.tier_dram_read, sa.tier_link_out, sa.tier_dram_stored)
+    assert sa.tier_io_service_s > 0
+    assert sa.tier_io_queue_delay_s >= 0
+
+
+def test_many_streams_match_sequential_engines(engine_pair):
+    """N streams sharing ONE device queue generate the same logits/tokens
+    as N engines run one after another, and the summed per-stream receipt
+    traffic equals the shared device totals field-for-field."""
+    cfg, params = engine_pair
+    n_streams, n_tok = 3, 6
+    prompts = [
+        ((np.arange(48) * (i + 1) + i) % cfg.vocab)
+        .astype(np.int32).reshape(1, 48)
+        for i in range(n_streams)
+    ]
+
+    multi = MultiStreamEngine(
+        cfg, params, n_streams, device_kind="trace", max_seq=96, batch=1,
+        page_tokens=16, hbm_kv_budget=1 << 12, policy=PAPER_POLICY,
+    )
+    toks_multi = multi.generate(prompts, n_tok)
+
+    for i in range(n_streams):
+        eng = ServeEngine(
+            cfg, params, max_seq=96, batch=1, page_tokens=16,
+            hbm_kv_budget=1 << 12, device_kind="trace",
+            policy=PAPER_POLICY, key_prefix=f"s{i}.",
+        )
+        toks_solo = eng.generate(prompts[i], n_tok)
+        np.testing.assert_array_equal(toks_multi[i], toks_solo)
+
+    # per-stream receipts conserve the shared device's aggregate traffic
+    d = multi.device_stats()
+    summed = {
+        f: sum(getattr(t, f)
+               for eng in multi.streams
+               for t in eng.pool.page_traffic.values())
+        for f in ("dram_bytes_read", "dram_bytes_written",
+                  "link_bytes_in", "link_bytes_out", "index_bytes")
+    }
+    assert summed == {f: getattr(d, f) for f in summed}
+    # streams are namespaced: no key collisions on the shared device
+    keys = [k for eng in multi.streams for k in eng.pool.page_traffic]
+    assert len(keys) == len(set(keys))
+    assert multi.throughput_ceiling() > 0
+    # sharing one window actually coalesces: some receipt waited behind
+    # another stream's request on the shared pipes
+    assert sum(s.tier_io_queue_delay_s for s in multi.stats()) > 0

@@ -1,0 +1,459 @@
+"""Async queued submission: tickets, in-flight window, ordering hazards.
+
+The contract under test: ``submit_async`` + ``drain`` is byte- and
+receipt-identical to one sync ``submit`` of the same batch (for every
+layout), receipts always sum exactly to the ``DeviceStats`` aggregate, and
+the queue survives window overflow, out-of-order waits, double waits,
+hazard fences, and mid-flush device failures without desyncing accounting.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.precision import FULL, VIEWS
+from repro.core.tier import (
+    KV,
+    LAYOUTS,
+    LinkModel,
+    ReadReq,
+    TENSOR,
+    TierStore,
+    WriteReq,
+    make_device,
+)
+
+SUM_FIELDS = (
+    "dram_bytes_read", "dram_bytes_written", "dram_bytes_stored",
+    "raw_bytes_stored", "link_bytes_in", "link_bytes_out",
+    "index_bytes", "index_hits", "index_misses", "blocks",
+)
+
+
+def _sum_receipts(receipts):
+    return {f: sum(getattr(r, f) for r in receipts) for f in SUM_FIELDS}
+
+
+def _stats_dict(stats):
+    return {f: getattr(stats, f) for f in SUM_FIELDS}
+
+
+def _mixed_batch(kv_window):
+    """Writes then reads over tensors + KV streams, several views."""
+    batch = [
+        WriteReq("w0", synth.weights(6_000, seed=0)),
+        WriteReq("s0", synth.kv_cache(2 * kv_window, 64, seed=1), kind=KV),
+        WriteReq("w1", synth.weights(2_048, seed=2)),
+        WriteReq("s1", synth.kv_cache(kv_window, 32, seed=3), kind=KV),
+        WriteReq("part", synth.kv_cache(kv_window // 2, 32, seed=4),
+                 kind=KV, flush=False),          # stays staged → read flushes
+    ]
+    batch += [
+        ReadReq("s0", kind=KV),
+        ReadReq("w0", view=VIEWS["man4"]),
+        ReadReq("s1", kind=KV, view=VIEWS["man0"]),
+        ReadReq("w0", view=FULL),
+        ReadReq("part", kind=KV),
+        ReadReq("w1", block_range=(0, 1)),
+    ]
+    return batch
+
+
+def _check_receipt_pair(sync_rec, async_rec):
+    assert sync_rec.op == async_rec.op and sync_rec.key == async_rec.key
+    if sync_rec.data is None:
+        assert async_rec.data is None
+    else:
+        np.testing.assert_array_equal(sync_rec.data, async_rec.data)
+    for f in SUM_FIELDS:
+        assert getattr(sync_rec, f) == getattr(async_rec, f), f
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_async_drain_differential_vs_sync(layout):
+    """submit_async + drain == submit: same bytes, same per-request traffic,
+    same aggregate — for every layout, on a mixed tensor/KV batch."""
+    kv_window = 16
+    sync_dev = TierStore(layout=layout, kv_window=kv_window)
+    async_dev = TierStore(layout=layout, kv_window=kv_window)
+    batch = _mixed_batch(kv_window)
+    # KV reduced views are only legal on kv-transform layouts
+    if not sync_dev.layout.kv_transform:
+        batch = [r if not (isinstance(r, ReadReq) and r.kind == KV)
+                 else ReadReq(r.key, kind=KV, view=FULL, tag=r.tag)
+                 for r in batch]
+
+    sync_recs = sync_dev.submit(batch)
+    tickets = async_dev.submit_async(batch)
+    async_recs = async_dev.drain(tickets)
+
+    assert len(sync_recs) == len(async_recs) == len(batch)
+    for s, a in zip(sync_recs, async_recs):
+        _check_receipt_pair(s, a)
+    # receipt sums are conserved on both devices and agree with each other
+    assert _sum_receipts(async_recs) == _stats_dict(async_dev.stats)
+    assert _stats_dict(sync_dev.stats) == _stats_dict(async_dev.stats)
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_async_receipt_sums_conserved_across_flush_patterns(layout):
+    """However the window slices the queue into flush groups, every receipt
+    lands in the aggregate exactly once."""
+    dev = TierStore(layout=layout, kv_window=8, window=3)
+    streams = {f"s{i}": synth.kv_cache(8, 16, seed=20 + i) for i in range(7)}
+    receipts = [
+        t.wait()
+        for t in dev.submit_async(
+            [WriteReq(k, v, kind=KV) for k, v in streams.items()]
+        )
+    ]
+    tickets = []
+    for i, k in enumerate(streams):          # one call per request → window
+        tickets += dev.submit_async([ReadReq(k, kind=KV)])  # overflow fires
+        if i == 4:
+            receipts.append(dev.submit(      # sync call drains the queue
+                [ReadReq("s0", kind=KV)]
+            )[0])
+    receipts += dev.drain(tickets)
+    assert _sum_receipts(receipts) == _stats_dict(dev.stats)
+
+
+def test_window_limit_bounds_inflight_and_triggers_execution():
+    dev = make_device("trace", kv_window=16, window=4)
+    dev.submit([WriteReq(f"p{i}", synth.kv_cache(16, 32, seed=i), kind=KV)
+                for i in range(6)])
+    base = _stats_dict(dev.stats)
+
+    # up to `window` reads stay lazy: nothing executes, nothing is counted
+    tickets = dev.submit_async([ReadReq(f"p{i}", kind=KV) for i in range(4)])
+    assert dev.pending == 4
+    assert not any(t.done for t in tickets)
+    assert _stats_dict(dev.stats) == base
+
+    # the (window+1)th read flushes the full group as one coalesced batch
+    tickets += dev.submit_async([ReadReq("p4", kind=KV)])
+    assert all(t.done for t in tickets[:4])
+    assert not tickets[4].done and dev.pending == 1
+    assert _stats_dict(dev.stats) != base
+
+    dev.drain()
+    assert dev.pending == 0 and tickets[4].done
+
+
+def test_out_of_order_wait_and_double_wait():
+    dev = make_device("trace", kv_window=16, window=64)
+    data = {f"p{i}": synth.kv_cache(16, 32, seed=40 + i) for i in range(6)}
+    dev.submit([WriteReq(k, v, kind=KV) for k, v in data.items()])
+    tickets = dev.submit_async([ReadReq(k, kind=KV) for k in data])
+
+    # waiting on a late ticket completes the queue prefix up to it...
+    r4 = tickets[4].wait()
+    assert all(t.done for t in tickets[:5])
+    assert not tickets[5].done and dev.pending == 1
+    # ...so earlier tickets answer out of wait order, without re-executing
+    before = _stats_dict(dev.stats)
+    r1 = tickets[1].wait()
+    assert _stats_dict(dev.stats) == before
+    np.testing.assert_array_equal(r1.data, data["p1"])
+    np.testing.assert_array_equal(r4.data, data["p4"])
+    # double-wait is idempotent: the very same receipt object
+    assert tickets[4].wait() is r4 and tickets[1].wait() is r1
+    np.testing.assert_array_equal(tickets[5].wait().data, data["p5"])
+
+
+def test_validation_failure_leaves_device_and_queue_untouched():
+    dev = make_device("trace", kv_window=16)
+    dev.submit([WriteReq("w", synth.weights(2_048, seed=0))])
+    ok = dev.submit_async([ReadReq("w")])
+    before = _stats_dict(dev.stats)
+    with pytest.raises(KeyError):
+        dev.submit_async([WriteReq("x", synth.weights(2_048, seed=1)),
+                          ReadReq("typo")])
+    assert _stats_dict(dev.stats) == before   # nothing posted, nothing queued
+    assert dev.pending == 1
+    np.testing.assert_array_equal(
+        dev.drain(ok)[0].data.ravel(), synth.weights(2_048, seed=0)
+    )
+
+
+def test_flush_failure_faults_all_group_tickets_then_device_recovers():
+    """A device-side failure mid-flush (simulated decode fault) must fault
+    every ticket of the group with the same error, keep wait() re-raising,
+    and leave the device usable for subsequent requests."""
+    dev = make_device("trace", kv_window=16, window=64)
+    data = {f"p{i}": synth.kv_cache(16, 32, seed=60 + i) for i in range(3)}
+    dev.submit([WriteReq(k, v, kind=KV) for k, v in data.items()])
+    tickets = dev.submit_async([ReadReq(k, kind=KV) for k in data])
+
+    real_decode = dev.layout.decode_batch
+    boom = RuntimeError("simulated ECC fault")
+
+    def faulty(*a, **kw):
+        raise boom
+
+    dev.layout.decode_batch = faulty
+    try:
+        with pytest.raises(RuntimeError, match="simulated ECC fault"):
+            tickets[1].wait()
+    finally:
+        dev.layout.decode_batch = real_decode
+
+    for t in tickets[:2]:                    # the failed flush group
+        assert t.done
+        with pytest.raises(RuntimeError, match="simulated ECC fault"):
+            t.wait()                         # exception path is idempotent
+    assert dev.pending == 1                  # ticket 2 was never flushed
+
+    # the queue and device still work after the fault
+    np.testing.assert_array_equal(tickets[2].wait().data, data["p2"])
+    rec, = dev.submit([ReadReq("p0", kind=KV)])
+    np.testing.assert_array_equal(rec.data, data["p0"])
+
+
+def test_write_after_read_fence_preserves_program_order():
+    """A write posted over a queued read of the same key must not be
+    observed by that read: async results equal the sync program order."""
+    dev = make_device("trace", kv_window=8, window=64)
+    first = synth.kv_cache(8, 16, seed=0)
+    more = synth.kv_cache(8, 16, seed=1)
+    dev.submit([WriteReq("s", first, kind=KV)])
+    t_read, = dev.submit_async([ReadReq("s", kind=KV)])
+    dev.submit_async([WriteReq("s", more, kind=KV)])   # triggers the fence
+    np.testing.assert_array_equal(t_read.wait().data, first)
+    t2, = dev.submit_async([ReadReq("s", kind=KV)])
+    np.testing.assert_array_equal(
+        t2.wait().data, np.concatenate([first, more])
+    )
+
+
+def test_sync_submit_drains_queue_first():
+    """Legacy sync callers always observe program order even with tickets
+    outstanding (the drain-then-sync fallback of the protocol)."""
+    dev = make_device("trace", kv_window=8, window=64)
+    kv = synth.kv_cache(8, 16, seed=3)
+    dev.submit([WriteReq("s", kv, kind=KV)])
+    t, = dev.submit_async([ReadReq("s", kind=KV)])
+    rec = dev.read_kv("s")                   # shim → submit → drains queue
+    assert t.done
+    np.testing.assert_array_equal(t.wait().data, kv)
+    np.testing.assert_array_equal(rec, kv)
+
+
+def test_delete_completes_inflight_reads_first():
+    dev = make_device("trace", kv_window=8, window=64)
+    kv = synth.kv_cache(8, 16, seed=4)
+    dev.submit([WriteReq("s", kv, kind=KV)])
+    t, = dev.submit_async([ReadReq("s", kind=KV)])
+    dev.delete("s")
+    np.testing.assert_array_equal(t.wait().data, kv)
+    assert dev.n_blocks("s") == 0
+
+
+def test_queue_delay_and_overlap_latency_model():
+    """Receipts in one flush group share the pipes: completion times are
+    monotone, each request's latency >= its serialized service, delay 0 on
+    the group head, and the group completes faster than serial service."""
+    dev = make_device("trace", kv_window=32, window=64)
+    dev.submit([WriteReq(f"p{i}", synth.kv_cache(32, 128, seed=80 + i),
+                         kind=KV) for i in range(8)])
+    recs = dev.drain(dev.submit_async(
+        [ReadReq(f"p{i}", kind=KV) for i in range(8)]
+    ))
+    lats = [r.latency_s for r in recs]
+    assert lats == sorted(lats)
+    assert recs[0].queue_delay_s == 0.0
+    for r in recs:
+        assert r.service_s > 0
+        assert r.latency_s >= r.service_s - 1e-18
+        assert r.latency_s == pytest.approx(r.queue_delay_s + r.service_s)
+    assert max(lats) < sum(r.service_s for r in recs)
+    # the schedule helper agrees with an explicit cumulative computation
+    lm = LinkModel()
+    traffic = [(r.dram_bytes_read, r.link_bytes_out) for r in recs]
+    cum_d = cum_l = 0
+    for (d, l), r in zip(traffic, recs):
+        cum_d, cum_l = cum_d + d, cum_l + l
+        want = lm.base_s + max(cum_d / lm.ddr_bw, cum_l / lm.link_bw)
+        assert r.latency_s == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# randomized interleaving differential (seeded mirror of the hypothesis
+# property in test_property.py, so the invariant is exercised even where
+# hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+def run_interleaving_differential(layout, ops, kv_window=8, window=3):
+    """Replay ``ops`` on a sync-only device and on a device whose reads go
+    through the async queue; assert byte-identical results and equal
+    aggregate traffic.
+
+    ``ops`` is a sequence of tuples:
+      ("w",  key, seed, n_tokens)  — KV write (flush)
+      ("wt", key, seed, n_elems)   — tensor write
+      ("r",  key)                  — sync read
+      ("ra", key)                  — async read (awaited at the end)
+    Reads are only issued for keys already written.
+    """
+    sync_dev = TierStore(layout=layout, kv_window=kv_window, window=window)
+    async_dev = TierStore(layout=layout, kv_window=kv_window, window=window)
+    kinds = {}
+    sync_out, async_tickets, async_expect = [], [], []
+
+    for op in ops:
+        if op[0] == "w":
+            _, key, seed, n = op
+            data = synth.kv_cache(n, 16, seed=seed)
+            kinds[key] = KV
+            sync_dev.submit([WriteReq(key, data, kind=KV)])
+            async_dev.submit_async([WriteReq(key, data, kind=KV)])
+        elif op[0] == "wt":
+            _, key, seed, n = op
+            data = synth.weights(n, seed=seed)
+            kinds[key] = TENSOR
+            sync_dev.submit([WriteReq(key, data)])
+            async_dev.submit_async([WriteReq(key, data)])
+        else:
+            _, key = op[0], op[1]
+            req = ReadReq(key, kind=kinds[key])
+            want, = sync_dev.submit([req])
+            if op[0] == "r":
+                got, = async_dev.submit([req])
+                np.testing.assert_array_equal(want.data, got.data)
+            else:
+                async_tickets += async_dev.submit_async([req])
+                async_expect.append(want.data)
+    for t, want in zip(async_tickets, async_expect):
+        np.testing.assert_array_equal(t.wait().data, want)
+    assert _stats_dict(sync_dev.stats) == _stats_dict(async_dev.stats)
+
+
+def random_ops(rng, n_ops=24, n_keys=4):
+    """A random program-order op sequence (shared with the property test)."""
+    ops, written = [], []
+    for _ in range(n_ops):
+        roll = rng.random()
+        key = f"k{rng.integers(n_keys)}"
+        if roll < 0.4 or not written:
+            if rng.random() < 0.5:
+                ops.append(("w", key, int(rng.integers(1000)),
+                            int(rng.integers(1, 4)) * 8))
+            else:
+                ops.append(("wt", key + "t", int(rng.integers(1000)),
+                            int(rng.integers(1, 5)) * 512))
+            written.append(ops[-1][1])
+        elif roll < 0.65:
+            ops.append(("r", written[int(rng.integers(len(written)))]))
+        else:
+            ops.append(("ra", written[int(rng.integers(len(written)))]))
+    return ops
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_interleavings_differential(layout, seed):
+    rng = np.random.default_rng(seed)
+    run_interleaving_differential(layout, random_ops(rng))
+
+
+# ---------------------------------------------------------------------------
+# KVPagePool over the async front-end (no model forward needed)
+# ---------------------------------------------------------------------------
+
+def _filled_pool(kind="trace", pages=6, layers=1, policy=None):
+    from repro.runtime.paging import KVPagePool
+
+    kw = {"policy": policy} if policy is not None else {}
+    pool = KVPagePool(kind, page_tokens=8,
+                      hbm_budget_bytes=8 * 64 * 2 * 2, **kw)
+    rng = np.random.default_rng(0)
+    for i in range(pages):
+        for layer in range(layers):
+            page = (rng.normal(size=(8, 64)).astype(np.float32)
+                    .view(np.uint32) >> 16).astype(np.uint16)
+            pool.append_page(layer, "k", i * 8, page,
+                             importance=float(i * layers + layer))
+    return pool
+
+
+@pytest.mark.parametrize("kind", ["plain", "gcomp", "trace"])
+def test_pool_async_readback_matches_sync(kind):
+    sync_pool, async_pool = _filled_pool(kind), _filled_pool(kind)
+    spilled = [p for p in sync_pool._pages if p.resident is None]
+    assert spilled
+    want = sync_pool.read_pages(spilled)
+    spilled_b = [p for p in async_pool._pages if p.resident is None]
+    tickets = async_pool.read_pages_async(spilled_b)
+    assert async_pool.device.pending == len(tickets)
+    got = async_pool.drain_reads(tickets)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    # identical traffic attribution and queue-delay accounting present
+    a = {k: vars(t) for k, t in sync_pool.page_traffic.items()}
+    b = {k: vars(t) for k, t in async_pool.page_traffic.items()}
+    assert a == b
+    assert async_pool.io_service_s > 0 and async_pool.io_queue_delay_s >= 0
+
+
+def test_pool_prefetch_served_by_read_layer():
+    plain, pre = _filled_pool(), _filled_pool()
+    want = plain.read_layer(0, "k")
+    n = pre.prefetch_layer(0, "k")
+    assert n == pre.spilled_pages > 0
+    assert pre.prefetch_layer(0, "k") == 0      # already in flight
+    got = pre.read_layer(0, "k")
+    np.testing.assert_array_equal(want, got)
+    # every prefetch ticket was consumed and accounted exactly once
+    assert not pre._prefetched
+    assert _stats_dict(plain.device.stats) == _stats_dict(pre.device.stats)
+
+
+def test_pool_prefetch_views_match_read_layer_multilayer_lossy():
+    """Prefetch must rank views on the same (layer, kind)-subset basis as
+    read_layer: under a lossy policy with several layers, a global-rank
+    prefetch would issue mismatched views and every page would be
+    discarded and re-read (regression test)."""
+    from repro.runtime.paging import PAPER_POLICY
+
+    plain = _filled_pool(layers=2, policy=PAPER_POLICY)
+    pre = _filled_pool(layers=2, policy=PAPER_POLICY)
+    want0, want1 = plain.read_layer(0, "k"), plain.read_layer(1, "k")
+    assert pre.prefetch_layer(0, "k") > 0
+    assert pre.prefetch_layer(1, "k") > 0
+    np.testing.assert_array_equal(want0, pre.read_layer(0, "k"))
+    np.testing.assert_array_equal(want1, pre.read_layer(1, "k"))
+    assert not pre._prefetched                  # all consumed
+    # consumed, not re-read: identical total traffic to the no-prefetch pool
+    assert _stats_dict(plain.device.stats) == _stats_dict(pre.device.stats)
+
+
+def _pool_traffic_sums(pool):
+    fields = ("dram_bytes_read", "dram_bytes_written",
+              "link_bytes_in", "link_bytes_out", "index_bytes")
+    return {f: sum(getattr(t, f) for t in pool.page_traffic.values())
+            for f in fields}
+
+
+def test_abandoned_prefetch_stays_conserved():
+    """A prefetch flushed by unrelated traffic but never consumed by
+    read_layer must still be folded into the pool's receipts: the
+    receipts-sum == device-stats invariant survives abandonment."""
+    pool = _filled_pool()
+    assert pool.prefetch_layer(0, "k") > 0
+    # unrelated sync traffic drains the device queue → prefetch executes
+    spilled = [p for p in pool._pages if p.resident is None]
+    pool.read_pages(spilled[:1])
+    assert all(e[0].done for e in pool._prefetched.values())
+    # stats() settles executed-but-unconsumed tickets before reporting
+    d = pool.stats()
+    want = {f: getattr(d, f) for f in
+            ("dram_bytes_read", "dram_bytes_written",
+             "link_bytes_in", "link_bytes_out", "index_bytes")}
+    assert _pool_traffic_sums(pool) == want
+    # the settled data is still served to a later read_layer, re-read-free
+    before = pool.stats().dram_bytes_read
+    pool.read_layer(0, "k")
+    after = pool.stats().dram_bytes_read
+    assert not pool._prefetched
+    assert _pool_traffic_sums(pool)["dram_bytes_read"] == after
+    assert after == before   # served from settled prefetch receipts
