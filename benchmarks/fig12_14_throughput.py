@@ -67,6 +67,9 @@ def _async_multistream_throughput(sys: SystemSpec):
             WriteReq(k, synth.kv_cache(tokens, channels, seed=400 + i), kind=KV)
             for i, k in enumerate(keys)
         ])
+        # setup writes are posted; idle the busy clock so the sync/async
+        # comparison below prices read scheduling, not write backlog
+        dev.quiesce()
 
     # sync-sequential: each stream's pages read one submit at a time
     t_sync = sum(

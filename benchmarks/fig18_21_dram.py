@@ -67,10 +67,14 @@ def run():
 
     tr, pl = WeightStore("trace"), WeightStore("plain")
     for store in (tr, pl):
-        for i in range(16):
-            w = synth.weights(1 << 16, "bf16", seed=40 + i)
-            store.put(f"u{i}", w.view(ml_dtypes.bfloat16).reshape(256, 256),
-                      importance=float(16 - i))
+        # one batched load → the device encodes the whole model as a few
+        # vectorized slab passes (the write-path mirror of fetch_all)
+        store.put_many({
+            f"u{i}": (synth.weights(1 << 16, "bf16", seed=40 + i)
+                      .view(ml_dtypes.bfloat16).reshape(256, 256),
+                      float(16 - i))
+            for i in range(16)
+        })
         store.stats.reset_traffic()
         store.fetch_all()
     emit("fig18", "live_weight_dram_bytes_savings",

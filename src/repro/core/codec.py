@@ -12,13 +12,28 @@ bespoke compressor.  We model the paper's two codecs:
 
 Both are exposed through a tiny registry with block-level *bypass*: when a
 block is incompressible the device stores it raw and marks the index entry
-(paper §III-D "Bypass and correctness invariants").
+(paper §III-D "Bypass and correctness invariants").  The bypass decision is
+two-stage: a cheap sampled entropy pre-screen routes near-certainly
+incompressible blocks to raw storage *before* paying for compression (the
+controller's line-rate engines do the same to avoid stalling on
+high-entropy planes), and blocks that do run the codec fall back to raw
+when the payload fails :data:`BYPASS_THRESHOLD`.
+
+The write path is batched: :func:`compress_batch` compresses a flush
+group's blocks in one pass — for LZ4 the 4-byte words and their hashes are
+precomputed over the whole concatenated slab in vectorized numpy (the
+per-block emit loop then just walks precomputed arrays), and for zstd the
+group goes through the library's multi-frame API when available.  Payloads
+are byte-identical to per-block :func:`compress_block` calls by
+construction (per-block hash tables, per-block emit), which the encode
+differential tests assert.
 """
 
 from __future__ import annotations
 
 import warnings
-from typing import Callable, Dict, Tuple
+from bisect import bisect_left
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -47,73 +62,331 @@ def _lz4_hash(seq_u32: int) -> int:
     return (seq_u32 * 2654435761) >> (32 - _HASH_LOG) & (_HASH_SIZE - 1)
 
 
-def lz4_compress(data: bytes) -> bytes:
-    """Greedy LZ4 block-format compression (pure python + numpy hashing)."""
-    n = len(data)
-    if n == 0:
-        return b"\x00"
-    buf = np.frombuffer(data, dtype=np.uint8)
-    out = bytearray()
-    if n >= _MIN_MATCH:
-        # vectorised 4-byte little-endian words + hashes for every position
-        w = (
-            buf[:-3].astype(np.uint32)
-            | (buf[1:-2].astype(np.uint32) << 8)
-            | (buf[2:-1].astype(np.uint32) << 16)
-            | (buf[3:].astype(np.uint32) << 24)
-        )
-        hashes = ((w * np.uint32(2654435761)) >> np.uint32(32 - _HASH_LOG)).astype(
-            np.int64
-        )
-    table = np.full(_HASH_SIZE, -1, dtype=np.int64)
+def _lz4_words_hashes(buf: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorised 4-byte little-endian words + hashes for every position.
 
-    def emit(lit_start: int, lit_end: int, match_len: int, offset: int):
-        lit_len = lit_end - lit_start
-        tok_lit = min(lit_len, 15)
-        tok_match = min(match_len - _MIN_MATCH, 15) if match_len else 0
-        out.append((tok_lit << 4) | tok_match)
-        rest = lit_len - 15
+    ``buf`` may be a whole encode slab: per-block hash/emit loops only ever
+    touch positions whose 4-byte window lies inside their own block, so the
+    precompute can be shared across a batch (see :func:`lz4_compress_batch`).
+    """
+    w = (
+        buf[:-3].astype(np.uint32)
+        | (buf[1:-2].astype(np.uint32) << 8)
+        | (buf[2:-1].astype(np.uint32) << 16)
+        | (buf[3:].astype(np.uint32) << 24)
+    )
+    hashes = ((w * np.uint32(2654435761)) >> np.uint32(32 - _HASH_LOG)).astype(
+        np.int64
+    )
+    return w, hashes
+
+
+_MATCH_CAP = 64        # vectorized-LCP sweep bound for offsets > 1; NOT an
+                       # output cap — selected matches that reach it are
+                       # extended to the true LCP by galloping (offset-1
+                       # byte runs extend uncapped via the run table), so
+                       # emitted matches equal the scalar scan's exactly
+_RUN_STRIDE = 4        # interior byte-run positions keep a candidate only
+                       # every _RUN_STRIDE bytes: candidates stay ~N/4 on
+                       # zero-heavy planes while a match ending mid-run
+                       # re-anchors within at most 3 literal bytes
+
+
+def _emit_seq(out: bytearray, data: bytes, lit_start: int, lit_end: int,
+              mlen: int, dist: int):
+    """Append one LZ4 sequence (token, literal run, optional match) —
+    the general path with 255-extension chains; ``mlen == 0`` emits the
+    end-of-block literal-only sequence."""
+    append = out.append
+    lit_len = lit_end - lit_start
+    tok_lit = min(lit_len, 15)
+    tok_match = min(mlen - _MIN_MATCH, 15) if mlen else 0
+    append((tok_lit << 4) | tok_match)
+    rest = lit_len - 15
+    while rest >= 0:
+        append(min(rest, 255))
+        if rest < 255:
+            break
+        rest -= 255
+    out += data[lit_start:lit_end]
+    if mlen:
+        append(dist & 0xFF)
+        append(dist >> 8)
+        rest = mlen - _MIN_MATCH - 15
         while rest >= 0:
-            out.append(min(rest, 255))
+            append(min(rest, 255))
             if rest < 255:
                 break
             rest -= 255
-        out.extend(data[lit_start:lit_end])
-        if match_len:
-            out.append(offset & 0xFF)
-            out.append(offset >> 8)
-            rest = match_len - _MIN_MATCH - 15
-            while rest >= 0:
-                out.append(min(rest, 255))
-                if rest < 255:
-                    break
-                rest -= 255
 
-    i = 0
+
+def _lz4_emit(data: bytes, events, out: bytearray):
+    """Serialize match ``events`` over ``data`` in LZ4 block format.
+
+    ``events`` is an ascending list of ``(pos, dist, mlen)``; everything
+    between events is literals, and the block ends in a literal-only
+    sequence (the standard end-of-block rule).
+    """
+    n = len(data)
     anchor = 0
+    for pos, dist, mlen in events:
+        _emit_seq(out, data, anchor, pos, mlen, dist)
+        anchor = pos + mlen
+    _emit_seq(out, data, anchor, n, 0, 0)
+
+
+def _lz4_events_scalar(data: bytes) -> list:
+    """Reference match scan for one block — sequential python.
+
+    The algorithm (shared bit-for-bit with the vectorized batch scan):
+    every position feeds a last-occurrence hash table; a position ``i``
+    outside any selected match starts a match when its table candidate
+    has the same 4-byte word within the 64 KiB window; matches extend by
+    LCP, bounded by the end-of-block literal rules.  Offset-1
+    candidates are honoured only at a run's FIRST interior position
+    (``data[i-2] != data[i-1]``): one uncapped match covers the whole
+    run, and skipping the interior keeps the batch scan's candidate set
+    proportional to runs, not bytes.
+    """
+    n = len(data)
+    events: list = []
+    if n < _MFLIMIT + 1:
+        return events
+    w_np, h_np = _lz4_words_hashes(np.frombuffer(data, dtype=np.uint8))
+    w, hashes = w_np.tolist(), h_np.tolist()
+    table = [-1] * _HASH_SIZE
     limit = n - _MFLIMIT
-    while i < limit:
+    cur_end = 0
+    for i in range(n - 3):
         h = hashes[i]
         cand = table[h]
         table[h] = i
-        if cand >= 0 and i - cand <= 0xFFFF and w[cand] == w[i]:
-            # extend match forward
-            mlen = _MIN_MATCH
-            max_len = n - _LAST_LITERALS - i
-            while mlen < max_len and data[cand + mlen] == data[i + mlen]:
-                mlen += 1
-            emit(anchor, i, mlen, i - cand)
-            # insert a couple of positions inside the match to help later refs
-            step_end = min(i + mlen, limit)
-            for j in range(i + 1, min(i + 3, step_end)):
-                table[hashes[j]] = j
-            i += mlen
-            anchor = i
-        else:
-            i += 1
-    # final literals
-    emit(anchor, n, 0, 0)
+        if (i >= limit or i < cur_end or cand < 0
+                or i - cand > 0xFFFF or w[cand] != w[i]):
+            continue
+        dist = i - cand
+        if (dist == 1 and i >= 2 and data[i - 2] == data[i - 1]
+                and i % _RUN_STRIDE):
+            continue          # run interior: covered by run-first / stride
+        max_len = n - _LAST_LITERALS - i
+        mlen = _MIN_MATCH
+        while (mlen + 32 <= max_len
+               and data[cand + mlen : cand + mlen + 32]
+               == data[i + mlen : i + mlen + 32]):
+            mlen += 32
+        while mlen < max_len and data[cand + mlen] == data[i + mlen]:
+            mlen += 1
+        events.append((i, dist, mlen))
+        cur_end = i + mlen
+    return events
+
+
+def lz4_compress(data: bytes) -> bytes:
+    """LZ4 block-format compression (pure python + numpy hashing)."""
+    if len(data) == 0:
+        return b"\x00"
+    out = bytearray()
+    _lz4_emit(data, _lz4_events_scalar(data), out)
     return bytes(out)
+
+
+def _lz4_compress_slab(buf: np.ndarray, chunks: Sequence[bytes]) -> List[bytes]:
+    """Vectorized match scan + fused greedy emit over a concatenated slab.
+
+    One word/hash pass, one previous-occurrence argsort, one run-boundary
+    scan and one (capped) LCP sweep serve every block of the batch; only
+    the final greedy selection walks SELECTED matches in python, emitting
+    each sequence as it is chosen (no event materialization).  Per block
+    the output is byte-identical to :func:`lz4_compress`: the
+    previous-occurrence keys are namespaced by block id, so candidates can
+    never cross a block boundary, exactly like the per-block hash table.
+    """
+    N = int(buf.size)
+    B = len(chunks)
+    def _all_literals() -> List[bytes]:
+        outs = []
+        for data in chunks:
+            blk = bytearray()
+            _lz4_emit(data, [], blk)
+            outs.append(bytes(blk) if data else b"\x00")
+        return outs
+    if N < _MIN_MATCH:
+        return _all_literals()
+    w, h = _lz4_words_hashes(buf)
+    sizes_a = np.asarray([len(c) for c in chunks], dtype=np.int64)
+    ends = np.cumsum(sizes_a)
+    starts_a = ends - sizes_a
+    # positions whose 4-byte word lies inside their own block: everything
+    # except the (up to) 3 positions before each block boundary
+    mask = np.ones(N - 3, dtype=bool)
+    cols = (ends[:, None] - np.arange(3, 0, -1)[None, :]).ravel()
+    cols = cols[(cols >= np.repeat(starts_a, 3)) & (cols >= 0)
+                & (cols < N - 3)]
+    mask[cols] = False
+    wvalid = np.flatnonzero(mask)
+    if wvalid.size == 0:
+        return _all_literals()
+    # previous same-hash occurrence within the block = last-occurrence
+    # hash table, computed for all positions at once (int32 keys sort
+    # measurably faster and hold block_id * 8192 + hash comfortably)
+    blk_w = np.searchsorted(ends, wvalid, side="right")
+    keys = (blk_w * np.int64(_HASH_SIZE) + h[wvalid]).astype(
+        np.int32 if B * _HASH_SIZE < (1 << 31) else np.int64
+    )
+    order = np.argsort(keys, kind="stable")      # stable: ascending pos
+    sp = wvalid[order]
+    same = keys[order][1:] == keys[order][:-1]
+    prev = np.full(N - 3, -1, dtype=np.int64)
+    prev[sp[1:][same]] = sp[:-1][same]
+
+    g = np.flatnonzero(prev >= 0)
+    cand = prev[g]
+    blk_g = np.searchsorted(ends, g, side="right")
+    local_g = g - starts_a[blk_g]
+    nb_g = sizes_a[blk_g]
+    ok = ((local_g < nb_g - _MFLIMIT)
+          & (g - cand <= 0xFFFF)
+          & (w[g] == w[cand]))
+    # interior of a byte run: covered by the run-first candidate's
+    # uncapped match (same rule as the scalar scan) — dropping all but
+    # every _RUN_STRIDE-th keeps the candidate set ~N/4 instead of N on
+    # zero-heavy planes, while matches that end mid-run re-anchor within
+    # at most _RUN_STRIDE-1 literal bytes
+    ok &= ~((g - cand == 1) & (local_g >= 2) & (buf[g - 2] == buf[g - 1])
+            & (local_g % _RUN_STRIDE != 0))
+    keep = np.flatnonzero(ok)
+    g, cand, blk_g, local_g, nb_g = (
+        g[keep], cand[keep], blk_g[keep], local_g[keep], nb_g[keep])
+    if g.size == 0:
+        return _all_literals()
+    dist = g - cand
+    max_len = nb_g - _LAST_LITERALS - local_g
+    mlen = np.full(g.size, _MIN_MATCH, dtype=np.int64)
+
+    run = dist == 1
+    if run.any():
+        # offset-1 = byte run: LCP is the run length, read off the
+        # run-boundary table instead of byte-compare loops
+        bnd = np.flatnonzero(buf[1:] != buf[:-1])    # last index of each run
+        if bnd.size:
+            idx = np.searchsorted(bnd, g[run] - 1, side="left")
+            rend = np.where(idx < bnd.size,
+                            bnd[np.minimum(idx, bnd.size - 1)], N - 1)
+        else:
+            rend = np.full(int(run.sum()), N - 1, dtype=np.int64)
+        mlen[run] = np.minimum(rend - g[run] + 1, max_len[run])
+    gen = np.flatnonzero(~run)
+    if gen.size:
+        # LCP sweep, word-stride: compare 4 bytes per pass via the word
+        # array (w[x] = bytes x..x+3, in-block by the cap bound); a failed
+        # word resolves its 0-3 leading equal bytes exactly, survivors
+        # that run out of word room finish in the byte phase below.
+        cap = np.minimum(max_len[gen], _MATCH_CAP)
+        gg, cc = g[gen], cand[gen]
+        ml = np.full(gen.size, _MIN_MATCH, dtype=np.int64)
+        k = _MIN_MATCH
+        alive = np.arange(gen.size)
+        partial: List[np.ndarray] = []       # ran out of word room at ml=k
+        while True:
+            word_ok = cap[alive] >= k + 4
+            if not word_ok.all():
+                partial.append(alive[~word_ok])
+                alive = alive[word_ok]
+            if alive.size == 0:
+                break
+            eqw = w[gg[alive] + k] == w[cc[alive] + k]
+            fail = alive[~eqw]
+            if fail.size:
+                b0 = (buf[gg[fail] + k] == buf[cc[fail] + k]).astype(np.int64)
+                b1 = b0 & (buf[gg[fail] + k + 1] == buf[cc[fail] + k + 1])
+                b2 = b1 & (buf[gg[fail] + k + 2] == buf[cc[fail] + k + 2])
+                ml[fail] = k + b0 + b1 + b2
+            alive = alive[eqw]
+            k += 4
+            ml[alive] = k
+        # byte phase: at most 3 bytes of per-element room left
+        arr = np.concatenate(partial) if partial else alive
+        while arr.size:
+            arr = arr[cap[arr] > ml[arr]]
+            if arr.size == 0:
+                break
+            eq = buf[gg[arr] + ml[arr]] == buf[cc[arr] + ml[arr]]
+            arr = arr[eq]
+            ml[arr] += 1
+        mlen[gen] = ml
+
+    # Greedy left-to-right selection fused with emit.  bisect skips the
+    # candidates a selected match covers in O(log) instead of walking
+    # them, so this loop runs once per EMITTED match, not once per
+    # candidate; dist/mlen are only materialized for matches that are
+    # actually selected, and each sequence is serialized as it is chosen.
+    # Selected matches whose sweep hit _MATCH_CAP gallop out to the true
+    # LCP here — selected matches never overlap, so total galloping work
+    # is bounded by the slab size.
+    pos_l = local_g.tolist()
+    b_lo = np.searchsorted(blk_g, np.arange(B), side="left").tolist()
+    b_hi = np.searchsorted(blk_g, np.arange(B), side="right").tolist()
+    dist_i = dist.item
+    mlen_i = mlen.item
+    sizes_l = sizes_a.tolist()
+    outs: List[bytes] = []
+    for blk in range(B):
+        data = chunks[blk]
+        n = sizes_l[blk]
+        if n == 0:
+            outs.append(b"\x00")
+            continue
+        i, hi = b_lo[blk], b_hi[blk]
+        out = bytearray()
+        append = out.append
+        anchor = 0
+        while i < hi:
+            p = pos_l[i]
+            m = mlen_i(i)
+            d = dist_i(i)
+            if m == _MATCH_CAP and d != 1:
+                c = p - d
+                max_len = n - _LAST_LITERALS - p
+                while (m + 32 <= max_len
+                       and data[c + m : c + m + 32]
+                       == data[p + m : p + m + 32]):
+                    m += 32
+                while m < max_len and data[c + m] == data[p + m]:
+                    m += 1
+            lit = p - anchor
+            if lit < 15 and m < 19:
+                # fast path: single token byte, no extension chains
+                append((lit << 4) | (m - _MIN_MATCH))
+                out += data[anchor:p]
+                append(d & 0xFF)
+                append(d >> 8)
+            else:
+                _emit_seq(out, data, anchor, p, m, d)
+            anchor = p + m
+            i = bisect_left(pos_l, anchor, i + 1, hi)
+        lit = n - anchor
+        if lit < 15:
+            append(lit << 4)
+            out += data[anchor:]
+        else:
+            _emit_seq(out, data, anchor, n, 0, 0)
+        outs.append(bytes(out))
+    return outs
+
+
+def lz4_compress_batch(chunks: Sequence[bytes]) -> List[bytes]:
+    """Compress a batch of blocks in a few vectorized passes.
+
+    Byte-identical to mapping :func:`lz4_compress` over ``chunks`` (the
+    differential encode tests assert this), but the word/hash precompute,
+    candidate search, run scan and match-length sweep each run ONCE over
+    the concatenated slab instead of per block — the python-level work
+    left is proportional to the number of emitted matches, not bytes.
+    """
+    if not chunks:
+        return []
+    slab = b"".join(chunks)
+    return _lz4_compress_slab(np.frombuffer(slab, dtype=np.uint8), chunks)
 
 
 def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
@@ -169,6 +442,25 @@ def zstd_compress(data: bytes) -> bytes:
     return _ZSTD_C.compress(data)
 
 
+def zstd_compress_batch(chunks: Sequence[bytes]) -> List[bytes]:
+    """Multi-frame zstd: one library call for a whole flush group.
+
+    ``multi_compress_to_buffer`` produces the same independent frames as
+    per-chunk :func:`zstd_compress` calls (same compressor parameters),
+    amortizing python→C transitions; falls back to the per-chunk loop on
+    older ``zstandard`` builds.
+    """
+    if _zstd is None:  # pragma: no cover
+        raise RuntimeError("zstandard not available")
+    if chunks and hasattr(_ZSTD_C, "multi_compress_to_buffer"):
+        try:
+            res = _ZSTD_C.multi_compress_to_buffer(list(chunks))
+            return [res[i].tobytes() for i in range(len(res))]
+        except Exception:  # pragma: no cover - library/build specific
+            pass
+    return [_ZSTD_C.compress(c) for c in chunks]
+
+
 def zstd_decompress(data: bytes, max_out: int | None = None) -> bytes:
     if _zstd is None:  # pragma: no cover
         raise RuntimeError("zstandard not available")
@@ -214,17 +506,150 @@ def resolve_codec(name: str) -> str:
 
 RAW, COMPRESSED = 0, 1
 
+# Bypass rule (paper §III-D): a compressed payload is stored only when
+# len(comp) < BYPASS_THRESHOLD * len(raw); otherwise the block is stored
+# raw and the index entry is flagged.  1.0 = "store compressed iff it is
+# strictly smaller" — the conservative setting that can never expand a
+# block.  Devices that want headroom for decompression latency can lower
+# it (e.g. 0.9 requires a 10% gain before paying the codec on reads).
+BYPASS_THRESHOLD = 1.0
+
+# Entropy pre-screen: blocks whose sampled byte distribution is this close
+# to uniform (bits/byte, Miller-Madow bias-corrected) AND show no repeated
+# 4-byte word among the sampled positions are routed to bypass WITHOUT
+# running the codec.  Calibrated so uniform-random payloads ≥ 128 B (e.g.
+# mantissa/sign plane streams of well-scaled bf16 tensors, H ≈ 7.6-8.0)
+# bypass, while everything LZ4/zstd actually shrinks — periodic patterns,
+# text, exponent planes — stays well below (H ≤ 6.8 or duplicate words).
+BYPASS_ENTROPY_BITS = 7.5
+_PRESCREEN_MIN_LEN = 128     # below this, codec overhead is negligible
+_PRESCREEN_BYTES = 1024      # max bytes sampled for the histogram
+_PRESCREEN_WORDS = 64        # 4-byte words sampled for the repeat check
+
+
+def _prescreen_group(rows: np.ndarray) -> np.ndarray:
+    """Vectorized pre-screen over a ``(R, n)`` uint8 matrix of same-length
+    blocks → boolean bypass decision per row.
+
+    Single source of truth: the scalar :func:`prescreen_bypass` wraps this
+    with ``R = 1``, so the scalar and batched encoders cannot diverge on a
+    threshold-boundary rounding difference.
+    """
+    R, n = rows.shape
+    sample = rows[:, :: max(1, n // _PRESCREEN_BYTES)][:, :_PRESCREEN_BYTES]
+    S = sample.shape[1]
+    # per-row histograms via one offset bincount
+    offs = (np.arange(R, dtype=np.int64) * 256)[:, None]
+    counts = np.bincount(
+        (sample.astype(np.int64) + offs).ravel(), minlength=256 * R
+    ).reshape(R, 256)
+    p = counts / S
+    with np.errstate(divide="ignore", invalid="ignore"):
+        plogp = np.where(counts > 0, p * np.log2(np.where(counts > 0, p, 1.0)),
+                         0.0)
+    # Miller-Madow correction removes the small-sample bias that would
+    # otherwise make uniform data look ~0.3-0.7 bits "compressible".
+    entropy = -plogp.sum(axis=1) \
+        + ((counts > 0).sum(axis=1) - 1) / (2 * S * np.log(2))
+    out = entropy >= BYPASS_ENTROPY_BITS
+    if out.any():
+        # Long-range repeats hide from a histogram: sample 4-byte words on
+        # an even stride; any duplicate means LZ matches are likely —
+        # compress instead of bypassing.
+        k = min(_PRESCREEN_WORDS, n // 4)
+        pos = np.arange(k, dtype=np.int64) * ((n - 4) // max(k - 1, 1))
+        words = (
+            rows[:, pos].astype(np.uint32)
+            | (rows[:, pos + 1].astype(np.uint32) << 8)
+            | (rows[:, pos + 2].astype(np.uint32) << 16)
+            | (rows[:, pos + 3].astype(np.uint32) << 24)
+        )
+        sw = np.sort(words, axis=1)
+        out &= ~(sw[:, 1:] == sw[:, :-1]).any(axis=1)
+    return out
+
+
+def prescreen_bypass(data: bytes) -> bool:
+    """True when ``data`` is near-certainly incompressible (sampled test).
+
+    Deterministic (stride sampling, no RNG) so scalar and batched encoders
+    agree block-for-block.  False negatives only cost a wasted compression
+    attempt; false positives would change stored bytes, so both statistics
+    are thresholded conservatively.
+    """
+    if len(data) < _PRESCREEN_MIN_LEN:
+        return False
+    return bool(_prescreen_group(
+        np.frombuffer(data, dtype=np.uint8).reshape(1, -1))[0])
+
+
+def _prescreen_batch(chunks: Sequence[bytes]) -> List[bool]:
+    """Per-block bypass decisions for a batch — identical to mapping
+    :func:`prescreen_bypass`, but same-length blocks (the common case: a
+    plane stream per 4 KB block) share one vectorized pass."""
+    res = [False] * len(chunks)
+    by_len: Dict[int, List[int]] = {}
+    for i, ch in enumerate(chunks):
+        if len(ch) >= _PRESCREEN_MIN_LEN:
+            by_len.setdefault(len(ch), []).append(i)
+    for n, idxs in by_len.items():
+        rows = np.frombuffer(
+            b"".join(chunks[i] for i in idxs), dtype=np.uint8
+        ).reshape(len(idxs), n)
+        for i, ok in zip(idxs, _prescreen_group(rows)):
+            res[i] = bool(ok)
+    return res
+
 
 def compress_block(data: bytes, codec: str) -> tuple[bytes, int]:
     """Compress one block; fall back to raw storage when incompressible.
 
-    Returns ``(payload, flag)`` with flag ∈ {RAW, COMPRESSED}.
+    Returns ``(payload, flag)`` with flag ∈ {RAW, COMPRESSED}.  The bypass
+    decision (pre-screen + :data:`BYPASS_THRESHOLD`) is shared with
+    :func:`compress_batch`, so the two are byte-identical per block.
     """
+    if prescreen_bypass(data):
+        return data, RAW
     c, _ = CODECS[resolve_codec(codec)]
     comp = c(data)
-    if len(comp) >= len(data):
+    if len(comp) >= BYPASS_THRESHOLD * len(data):
         return data, RAW
     return comp, COMPRESSED
+
+
+def compress_batch(chunks: Sequence[bytes],
+                   codec: str) -> Tuple[List[bytes], List[int]]:
+    """Compress a flush group of blocks in a few vectorized passes.
+
+    Semantically ``zip(*[compress_block(c, codec) for c in chunks])`` —
+    byte-identical payloads and flags — but the pre-screen routes
+    incompressible blocks out before compression, and the surviving blocks
+    share one precompute (LZ4 slab words/hashes, zstd multi-frame call)
+    instead of paying per-block numpy/library overhead.
+    """
+    name = resolve_codec(codec)
+    payloads: List[bytes] = [b""] * len(chunks)
+    flags: List[int] = [RAW] * len(chunks)
+    todo: List[int] = []
+    for i, skip in enumerate(_prescreen_batch(chunks)):
+        if skip:
+            payloads[i] = chunks[i]
+        else:
+            todo.append(i)
+    if todo:
+        if name == "lz4":
+            comps = lz4_compress_batch([chunks[i] for i in todo])
+        elif name == "zstd":
+            comps = zstd_compress_batch([chunks[i] for i in todo])
+        else:
+            c, _ = CODECS[name]
+            comps = [c(chunks[i]) for i in todo]
+        for i, comp in zip(todo, comps):
+            if len(comp) >= BYPASS_THRESHOLD * len(chunks[i]):
+                payloads[i] = chunks[i]
+            else:
+                payloads[i], flags[i] = comp, COMPRESSED
+    return payloads, flags
 
 
 def decompress_block(payload: bytes, flag: int, codec: str, orig_len: int) -> bytes:
@@ -233,6 +658,16 @@ def decompress_block(payload: bytes, flag: int, codec: str, orig_len: int) -> by
     _, d = CODECS[resolve_codec(codec)]
     out = d(payload, max_out=orig_len)
     return out
+
+
+def decompress_batch(payloads: Sequence[bytes], flags: Sequence[int],
+                     codec: str, orig_lens: Sequence[int]) -> List[bytes]:
+    """Inverse of :func:`compress_batch`: one codec resolve for the group."""
+    _, d = CODECS[resolve_codec(codec)]
+    return [
+        pay if fl == RAW else d(pay, max_out=n)
+        for pay, fl, n in zip(payloads, flags, orig_lens)
+    ]
 
 
 def ratio(orig: int, comp: int) -> float:

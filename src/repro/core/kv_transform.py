@@ -107,6 +107,34 @@ def kv_inverse(stream_u16: np.ndarray, meta: KVBlockMeta) -> np.ndarray:
     return np.ascontiguousarray(out.T)
 
 
+def kv_forward_batch(windows: np.ndarray) -> tuple[np.ndarray, list]:
+    """Vectorized :func:`kv_forward` over same-shape windows.
+
+    ``windows``: ``(B, n, C)`` uint16 token-major.  Returns ``((B, n*C)``
+    transformed channel-major streams, ``B`` metas)`` — identical per
+    window to the scalar transform (the modal exponent is the same
+    bincount-argmax, just computed for all ``B*C`` channel groups in one
+    offset-bincount pass).  The write-side mirror of
+    :func:`kv_inverse_batch`: a flush group's windows transform in two
+    numpy passes instead of one python call per window.
+    """
+    B, n, C = windows.shape
+    cm = np.ascontiguousarray(windows.transpose(0, 2, 1))   # (B, C, n)
+    exp = ((cm & _EXP_MASK) >> EXP_LO).astype(np.uint8)
+    offs = (np.arange(B * C, dtype=np.int64) * 256)[:, None]
+    counts = np.bincount(
+        (exp.reshape(B * C, n).astype(np.int64) + offs).ravel(),
+        minlength=256 * B * C,
+    ).reshape(B * C, 256)
+    beta = counts.argmax(axis=1).astype(np.uint8).reshape(B, C)
+    delta = (exp.astype(np.int16) - beta[:, :, None].astype(np.int16)) % 256
+    z = _zigzag_u8(delta.astype(np.uint8))
+    out = (cm & _REST_MASK) | (z.astype(np.uint16) << EXP_LO)
+    metas = [KVBlockMeta(beta=beta[b].copy(), n_tokens=n, n_channels=C)
+             for b in range(B)]
+    return out.reshape(B, n * C), metas
+
+
 def kv_inverse_batch(streams: np.ndarray, metas: list) -> np.ndarray:
     """Vectorized :func:`kv_inverse` over same-shape windows.
 

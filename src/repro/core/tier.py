@@ -20,10 +20,18 @@ CXL.mem interface.  This module makes that boundary explicit:
   ``GCompDevice`` / ``TraceDevice`` are thin :class:`TierStore`
   configurations kept for compatibility.
 
-Batched submission is also a performance feature: a read batch's blocks
-are grouped by fetched plane-set and decoded in vectorized numpy passes —
-one plane-unpack and one reconstruction call per group, not per 4 KB
-block (see ``BitplaneLayout.decode_batch``).
+Batched submission is also a performance feature, in BOTH directions.  A
+read batch's blocks are grouped by fetched plane-set and decoded in
+vectorized numpy passes — one plane-unpack and one reconstruction call
+per group, not per 4 KB block (see ``BitplaneLayout.decode_batch``).  A
+write batch (sync or async posting group) stages every pending block into
+one encode slab and encodes it in a few vectorized passes — one batched
+KV transform, one plane pack (pallas kernel on accelerator backends) and
+ONE ``codec.compress_batch`` over every (plane, block) stream — instead
+of O(blocks x planes) python-level calls (see ``Layout.encode_batch`` /
+``TierStore._post_writes``).  The per-block pipeline survives as
+``Layout.encode_batch_scalar`` (``TierStore(batched_encode=False)``),
+byte-identical by the encode differential tests.
 
 Accounting conventions (per read):
   * ``dram_bytes``  — bytes the device DRAM actually serves (compressed
@@ -69,6 +77,16 @@ per group and transfers pipeline, which is what makes a drained batch
 faster than the sum of serialized sync requests (the paper's decode /
 fetch overlap at 128k context).  ``service_s`` keeps the serialized
 service time for comparison.
+
+Latency pricing carries ACROSS groups through a device-global busy
+clock: posted writes and window-overflow flushes advance per-pipe busy
+frontiers without advancing host time, so later groups queue behind
+their residual occupancy (write-heavy many-stream receipts price
+cross-boundary contention); a wait (sync read, ``drain``,
+``Ticket.wait``) advances host time to delivery, and
+:meth:`TierStore.quiesce` idles the host until the pipes drain.  The
+clock only shapes ``queue_delay_s``/``latency_s`` — byte accounting, and
+therefore the receipts-sum == ``DeviceStats`` invariant, is untouched.
 """
 
 from __future__ import annotations
@@ -86,7 +104,9 @@ from .bitplane import (
     pack_planes,
     unpack_planes_subset,
 )
-from .kv_transform import KVBlockMeta, kv_forward, kv_inverse_batch
+from .kv_transform import (
+    KVBlockMeta, kv_forward, kv_forward_batch, kv_inverse_batch,
+)
 from .precision import EXP_BITS, PrecisionView, FULL, reconstruct_u16
 
 INDEX_ENTRY_BYTES = 64  # paper §III-D: one compact entry per 4 KB block
@@ -160,6 +180,8 @@ class Receipt:
     index_bytes: int = 0
     index_hits: int = 0
     index_misses: int = 0
+    codec_blocks: int = 0         # payload streams that hit the bypass rule
+    codec_bypass: int = 0         # ... of which were stored raw (§III-D)
     latency_s: float = 0.0        # delivery time: queue_delay_s + service
     queue_delay_s: float = 0.0    # wait behind earlier in-flight requests
     service_s: float = 0.0        # serialized service time (sync latency)
@@ -187,7 +209,8 @@ class LinkModel:
                                  link_bytes / self.link_bw)
 
     def schedule(
-        self, traffic: Sequence[Tuple[int, int]]
+        self, traffic: Sequence[Tuple[int, int]],
+        ddr_backlog_s: float = 0.0, link_backlog_s: float = 0.0,
     ) -> List[Tuple[float, float]]:
         """Completion model for one in-flight group sharing DDR + link.
 
@@ -198,6 +221,13 @@ class LinkModel:
         the delivery time measured from group issue and ``queue_delay_s``
         is that minus the request's own serialized service time — i.e. the
         wait behind earlier requests on the occupied pipes.
+
+        ``ddr_backlog_s`` / ``link_backlog_s`` carry residual pipe
+        occupancy from EARLIER groups the host did not wait for (posted
+        writes, window-overflow flushes): this group's requests queue
+        behind that backlog, which is how many-stream receipts price
+        cross-group contention (the device-global busy clock kept by
+        :class:`TierStore`).
         """
         out: List[Tuple[float, float]] = []
         cum_dram = cum_link = 0
@@ -205,8 +235,8 @@ class LinkModel:
             service = self.latency(dram, link)
             cum_dram += dram
             cum_link += link
-            done = self.base_s + max(cum_dram / self.ddr_bw,
-                                     cum_link / self.link_bw)
+            done = self.base_s + max(ddr_backlog_s + cum_dram / self.ddr_bw,
+                                     link_backlog_s + cum_link / self.link_bw)
             out.append((max(done - service, 0.0), done))
         return out
 
@@ -225,6 +255,13 @@ class DeviceStats:
     index_misses: int = 0
     blocks: int = 0
     raw_bytes_stored: int = 0       # logical (uncompressed) footprint
+    codec_blocks: int = 0           # payload streams offered to the codec
+    codec_bypass: int = 0           # ... stored raw (bypass, paper §III-D)
+
+    @property
+    def bypass_rate(self) -> float:
+        """Fraction of codec payload streams stored raw (bypass rate)."""
+        return self.codec_bypass / max(self.codec_blocks, 1)
 
     def reset_traffic(self):
         self.dram_bytes_read = 0
@@ -245,6 +282,8 @@ class DeviceStats:
         self.index_hits += r.index_hits
         self.index_misses += r.index_misses
         self.blocks += r.blocks
+        self.codec_blocks += r.codec_blocks
+        self.codec_bypass += r.codec_bypass
 
     @property
     def compression_ratio(self) -> float:
@@ -264,6 +303,47 @@ class _Block:
     @property
     def stored_bytes(self) -> int:
         return sum(len(p) for p in self.payloads)
+
+
+class _EncodeSlab:
+    """Per-posting-group staging area for deferred batched encoding.
+
+    Write staging appends each pending block here (with its key, receipt
+    and optional KV meta, kept in parallel lists); the group is then
+    packed+compressed in one ``Layout.encode_batch`` pass and committed in
+    staging order — the write-side mirror of the read side's shared decode
+    slab.  KV windows are staged UNtransformed (``kv_windows`` slot): the
+    exponent-delta transform is independent per window, so it too defers
+    and runs as a batched pass at encode time (``kv_forward_batch``).
+    """
+
+    __slots__ = ("keys", "recs", "chunks", "valids", "metas", "kv_windows")
+
+    def __init__(self):
+        self.keys: List[str] = []
+        self.recs: List[Receipt] = []
+        self.chunks: List[Optional[np.ndarray]] = []
+        self.valids: List[int] = []
+        self.metas: List[Optional[KVBlockMeta]] = []
+        self.kv_windows: List[Optional[np.ndarray]] = []
+
+    def add(self, key: str, rec: Receipt, chunk: Optional[np.ndarray],
+            valid: int, meta: Optional[KVBlockMeta] = None,
+            kv_window: Optional[np.ndarray] = None):
+        self.keys.append(key)
+        self.recs.append(rec)
+        self.chunks.append(chunk)
+        self.valids.append(valid)
+        self.metas.append(meta)
+        self.kv_windows.append(kv_window)
+
+    def clear(self):
+        self.keys.clear()
+        self.recs.clear()
+        self.chunks.clear()
+        self.valids.clear()
+        self.metas.clear()
+        self.kv_windows.clear()
 
 
 class _IndexCache:
@@ -294,15 +374,31 @@ class Layout:
     physically cuts DRAM traffic (TRACE Mechanism II); word layouts always
     move full containers and reconstruct host-side (paper Issue 2).
     ``kv_transform`` enables the cross-token exponent-delta transform on KV
-    windows (TRACE Mechanism I).
+    windows (TRACE Mechanism I).  ``uses_codec`` marks layouts whose
+    payloads go through the inline codec (drives bypass-rate accounting).
+
+    Encoding is batched two ways: :meth:`encode_batch` is the production
+    path — a whole flush group in a few vectorized passes (one plane pack,
+    one ``compress_batch`` over every payload stream) — while
+    :meth:`encode_batch_scalar` is the O(blocks x planes) per-block
+    reference the device originally shipped with.  Both must produce
+    byte-identical payloads and flags; the encode differential tests hold
+    them to that.
     """
 
     name = "layout"
     plane_aligned = False
     kv_transform = False
+    uses_codec = False
 
     def encode_batch(self, chunks: Sequence[np.ndarray],
                      codec: str) -> List[Tuple[List[bytes], List[int]]]:
+        """Vectorized batch encode: one entry ``(payloads, flags)`` per chunk."""
+        raise NotImplementedError
+
+    def encode_batch_scalar(self, chunks: Sequence[np.ndarray],
+                            codec: str) -> List[Tuple[List[bytes], List[int]]]:
+        """Per-block reference encode (parity oracle + benchmark baseline)."""
         raise NotImplementedError
 
     def fetched_payloads(self, block: _Block, view: PrecisionView) -> Sequence[int]:
@@ -323,9 +419,17 @@ class WordLayout(Layout):
 
     def __init__(self, compress: bool):
         self.compress = compress
+        self.uses_codec = compress
         self.name = "word-comp" if compress else "word"
 
     def encode_batch(self, chunks, codec):
+        raws = [chunk.tobytes() for chunk in chunks]
+        if self.compress:
+            payloads, flags = codecs.compress_batch(raws, codec)
+            return [([pay], [fl]) for pay, fl in zip(payloads, flags)]
+        return [([raw], [codecs.RAW]) for raw in raws]
+
+    def encode_batch_scalar(self, chunks, codec):
         out = []
         for chunk in chunks:
             raw = chunk.tobytes()
@@ -341,12 +445,12 @@ class WordLayout(Layout):
     def decode_batch(self, blocks, view, codec):
         if not blocks:
             return []
-        outs = []
-        for b in blocks:
-            raw = codecs.decompress_block(
-                b.payloads[0], b.flags[0], codec, b.padded_elems * 2
-            )
-            outs.append(np.frombuffer(raw, dtype=np.uint16)[: b.valid_elems])
+        raws = codecs.decompress_batch(
+            [b.payloads[0] for b in blocks], [b.flags[0] for b in blocks],
+            codec, [b.padded_elems * 2 for b in blocks],
+        )
+        outs = [np.frombuffer(raw, dtype=np.uint16)[: b.valid_elems]
+                for raw, b in zip(raws, blocks)]
         if view.is_full:
             return [np.asarray(o) for o in outs]
         # Host-side precision conversion: one vectorized pass over the batch.
@@ -354,38 +458,100 @@ class WordLayout(Layout):
         return _split_like(flat, outs)
 
 
+def _pack_slab(flat_u16: np.ndarray) -> np.ndarray:
+    """Pack a flat uint16 slab to (16, n//8) planes — pallas kernel when an
+    accelerator backend is up, numpy otherwise (lazy one-time dispatch)."""
+    global _PACK_SLAB
+    if _PACK_SLAB is None:
+        try:
+            from ..kernels.bitplane import pack_planes_slab
+            _PACK_SLAB = pack_planes_slab
+        except Exception:  # pragma: no cover - kernels unavailable
+            _PACK_SLAB = lambda flat: pack_planes(flat)
+    return _PACK_SLAB(flat_u16)
+
+
+_PACK_SLAB = None
+
+
 class BitplaneLayout(Layout):
     """TRACE bit-plane substrate; plane-aligned fetch, vectorized batches."""
 
     plane_aligned = True
+    uses_codec = True
+
+    # Max elements packed+compressed per encode pass: same cache-residency
+    # tradeoff as SLAB_ELEMS on the decode side, but encode temporaries
+    # (the (16, n) bit matrix) are larger, so groups split on block
+    # boundaries past this budget.
+    ENCODE_SLAB_ELEMS = 128 * 1024
 
     def __init__(self, kv_transform: bool = True):
         self.kv_transform = kv_transform
         self.name = "bitplane-kv" if kv_transform else "bitplane"
 
-    def encode_batch(self, chunks, codec):
-        if not chunks:
-            return []
-        # One pack_planes call over the whole batch: blocks are padded to a
-        # byte multiple, so their plane streams concatenate cleanly.
+    @staticmethod
+    def _check_sizes(chunks) -> List[int]:
         sizes = [c.size for c in chunks]
         for n in sizes:
             if n % 8:
                 raise ValueError(f"block length {n} not a multiple of 8")
-        planes = pack_planes(np.concatenate(chunks))
+        return sizes
+
+    def encode_batch(self, chunks, codec):
+        if not chunks:
+            return []
+        sizes = self._check_sizes(chunks)
+        if len(chunks) > 1 and sum(sizes) > self.ENCODE_SLAB_ELEMS:
+            out, cur, cur_n = [], [], 0
+            for c in chunks:
+                if cur and cur_n + c.size > self.ENCODE_SLAB_ELEMS:
+                    out.extend(self._encode_slab(cur, codec))
+                    cur, cur_n = [], 0
+                cur.append(c)
+                cur_n += c.size
+            out.extend(self._encode_slab(cur, codec))
+            return out
+        return self._encode_slab(chunks, codec)
+
+    def _encode_slab(self, chunks, codec):
+        """One pack + ONE compress_batch for every (plane, block) stream.
+
+        Blocks are padded to a byte multiple, so their plane streams
+        concatenate cleanly: packing the concatenation and slicing per
+        block is byte-identical to packing each block alone.
+        """
+        sizes = [c.size for c in chunks]
+        planes = _pack_slab(np.concatenate(chunks) if len(chunks) > 1
+                            else chunks[0].ravel())
+        offs = np.cumsum([0] + [n // 8 for n in sizes]).tolist()
+        nblk = len(chunks)
+        streams: List[bytes] = []
+        for p in range(BF16_BITS):
+            row = planes[p]
+            streams.extend(
+                row[offs[i] : offs[i + 1]].tobytes() for i in range(nblk)
+            )
+        payloads, flags = codecs.compress_batch(streams, codec)
+        return [
+            ([payloads[p * nblk + i] for p in range(BF16_BITS)],
+             [flags[p * nblk + i] for p in range(BF16_BITS)])
+            for i in range(nblk)
+        ]
+
+    def encode_batch_scalar(self, chunks, codec):
+        # The original write pipeline: per-block plane pack, per-plane
+        # compress_block — O(blocks x planes) python-level calls.
         out = []
-        off = 0
-        for n in sizes:
-            nb = n // 8
+        self._check_sizes(chunks)
+        for chunk in chunks:
+            planes = pack_planes(chunk.ravel())
             payloads, flags = [], []
             for p in range(BF16_BITS):
-                pay, fl = codecs.compress_block(
-                    planes[p, off : off + nb].tobytes(), codec
-                )
+                pay, fl = codecs.compress_block(planes[p].tobytes(), codec)
                 payloads.append(pay)
                 flags.append(fl)
             out.append((payloads, flags))
-            off += nb
         return out
 
     def fetched_payloads(self, block, view):
@@ -422,10 +588,10 @@ class BitplaneLayout(Layout):
         # subset-unpack for the whole slab (unfetched planes read as zero).
         rows = np.stack([
             np.frombuffer(
-                b"".join(
-                    codecs.decompress_block(b.payloads[p], b.flags[p], codec, nb)
-                    for b, nb in zip(blocks, nbytes)
-                ),
+                b"".join(codecs.decompress_batch(
+                    [b.payloads[p] for b in blocks],
+                    [b.flags[p] for b in blocks], codec, nbytes,
+                )),
                 dtype=np.uint8,
             )
             for p in plane_set
@@ -537,13 +703,15 @@ class TierStore:
     def __init__(self, layout: Union[Layout, str] = "word",
                  codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
                  index_cache_entries: int = 4096, kv_window: int = 64,
-                 link_model: LinkModel = LinkModel(), window: int = 64):
+                 link_model: LinkModel = LinkModel(), window: int = 64,
+                 batched_encode: bool = True):
         self.layout = LAYOUTS[layout]() if isinstance(layout, str) else layout
         self.codec = codecs.resolve_codec(codec)
         self.block_elems = block_elems
         self.kv_window = kv_window
         self.link_model = link_model
         self.window = window                 # max queued (in-flight) reads
+        self.batched_encode = batched_encode  # False: scalar reference path
         self.stats = DeviceStats()
         self._tensors: Dict[str, List[_Block]] = {}
         self._shapes: Dict[str, tuple] = {}
@@ -551,6 +719,14 @@ class TierStore:
         self._kv_channels: Dict[str, int] = {}
         self._index = _IndexCache(index_cache_entries)
         self._queue: List[Ticket] = []       # pending read tickets, FIFO
+        # Device-global busy clock: host-time `now` plus per-pipe busy
+        # frontiers.  Posted writes and window-overflow flushes advance the
+        # frontiers without advancing `now`, so LATER groups queue behind
+        # their residual occupancy (cross-group contention pricing); waits
+        # (sync reads, drain, Ticket.wait) advance `now` to delivery.
+        self._now_s = 0.0
+        self._ddr_free_s = 0.0
+        self._link_free_s = 0.0
 
     # -- validation (shared by submit / submit_async) -------------------------
     def _validate(self, requests: Sequence[Request]):
@@ -587,18 +763,28 @@ class TierStore:
         """
         self._validate(requests)
         if self._queue:
-            self._flush_queue(len(self._queue))
+            self._flush_queue(len(self._queue), wait=True)
         receipts: List[Receipt] = [None] * len(requests)  # type: ignore
         # Writes execute in order first so reads in the same batch observe
-        # them (single-queue device semantics).
-        read_ix: List[int] = []
-        for i, req in enumerate(requests):
-            if isinstance(req, WriteReq):
-                receipts[i] = self._post_write(req)
-            else:
-                read_ix.append(i)
+        # them (single-queue device semantics); the batch's writes encode
+        # as ONE slab (see _post_writes).
+        write_ix = [i for i, r in enumerate(requests)
+                    if isinstance(r, WriteReq)]
+        written = set(write_ix)
+        read_ix = [i for i in range(len(requests)) if i not in written]
+        if write_ix:
+            for i, r in zip(write_ix,
+                            self._post_writes([requests[i] for i in write_ix])):
+                receipts[i] = r
         if read_ix:
-            for i, r in zip(read_ix, self._do_reads([requests[i] for i in read_ix])):
+            recs = self._do_reads([requests[i] for i in read_ix])
+            # sync reads are one group on the shared pipes; the host blocks
+            # on their data, so delivery advances the busy clock
+            self._schedule_group(
+                recs, [(r.dram_bytes_read, r.link_bytes_out) for r in recs],
+                wait=True,
+            )
+            for i, r in zip(read_ix, recs):
                 receipts[i] = r
         return receipts
 
@@ -622,17 +808,21 @@ class TierStore:
         if writes:
             hot = {w.key for w in writes}
             if any(t.request.key in hot for t in self._queue):
-                self._flush_queue(len(self._queue))
+                self._flush_queue(len(self._queue), wait=False)
         tickets: Dict[int, Ticket] = {}
-        for i, req in enumerate(requests):
-            if isinstance(req, WriteReq):
-                t = Ticket(self, req)
-                t._complete(self._post_write(req))
+        if writes:
+            # posted writes accumulate into one encode slab, mirroring how
+            # queued reads share one decode slab
+            write_ix = [i for i, r in enumerate(requests)
+                        if isinstance(r, WriteReq)]
+            for i, rec in zip(write_ix, self._post_writes(writes)):
+                t = Ticket(self, requests[i])
+                t._complete(rec)
                 tickets[i] = t
         for i, req in enumerate(requests):
             if i not in tickets:
                 if len(self._queue) >= self.window:
-                    self._flush_queue(len(self._queue))
+                    self._flush_queue(len(self._queue), wait=False)
                 t = Ticket(self, req)
                 self._queue.append(t)
                 tickets[i] = t
@@ -652,7 +842,7 @@ class TierStore:
         """
         waiting = list(tickets) if tickets is not None else list(self._queue)
         if self._queue:
-            self._flush_queue(len(self._queue))
+            self._flush_queue(len(self._queue), wait=True)
         return [t.wait() for t in waiting]
 
     def _flush_through(self, ticket: Ticket):
@@ -661,16 +851,21 @@ class TierStore:
             n = self._queue.index(ticket) + 1
         except ValueError:
             return                       # completed (or failed) elsewhere
-        self._flush_queue(n)
+        self._flush_queue(n, wait=True)
 
-    def _flush_queue(self, n: int):
+    def _flush_queue(self, n: int, wait: bool = True):
         """Execute the first ``n`` queued reads as one coalesced group.
 
         The group goes through the same vectorized batched-read path as a
         sync batch; receipts then get queue-delay / overlap-adjusted
-        latency from :meth:`LinkModel.schedule`.  On failure every ticket
-        of the group records the error (stats for whatever committed stay
-        applied by ``_do_reads``) and the error propagates.
+        latency from :meth:`LinkModel.schedule`, including any residual
+        pipe backlog from earlier groups (the busy clock).  ``wait`` marks
+        flushes the host blocks on (Ticket.wait / drain / sync submit) —
+        those advance host time to the group's delivery; window-overflow
+        and fence flushes do not, so their occupancy carries forward.  On
+        failure every ticket of the group records the error (stats for
+        whatever committed stay applied by ``_do_reads``) and the error
+        propagates.
         """
         group, self._queue = self._queue[:n], self._queue[n:]
         if not group:
@@ -681,61 +876,198 @@ class TierStore:
             for t in group:
                 t._fail(e)
             raise
-        times = self.link_model.schedule(
-            [(r.dram_bytes_read, r.link_bytes_out) for r in recs]
+        self._schedule_group(
+            recs, [(r.dram_bytes_read, r.link_bytes_out) for r in recs],
+            wait=wait,
         )
-        for t, r, (delay, done) in zip(group, recs, times):
-            r.queue_delay_s = delay
-            r.latency_s = done
+        for t, r in zip(group, recs):
             t._complete(r)
+
+    # -- busy clock ----------------------------------------------------------
+    def _schedule_group(self, recs: List[Receipt],
+                        traffic: List[Tuple[int, int]], wait: bool):
+        """Price one request group on the shared pipes and advance the
+        device-global busy clock.  Receipts get ``queue_delay_s`` /
+        ``latency_s`` measured from group issue (= host `now`), INCLUDING
+        residual DDR/link occupancy left by earlier groups the host never
+        waited for — receipts-sum == DeviceStats is untouched (bytes only).
+        """
+        if not recs:
+            return
+        now = self._now_s
+        ddr_b = max(self._ddr_free_s - now, 0.0)
+        link_b = max(self._link_free_s - now, 0.0)
+        times = self.link_model.schedule(traffic, ddr_backlog_s=ddr_b,
+                                         link_backlog_s=link_b)
+        for rec, (delay, done) in zip(recs, times):
+            rec.queue_delay_s = delay
+            rec.latency_s = done
+        lm = self.link_model
+        self._ddr_free_s = now + lm.base_s + ddr_b \
+            + sum(t[0] for t in traffic) / lm.ddr_bw
+        self._link_free_s = now + lm.base_s + link_b \
+            + sum(t[1] for t in traffic) / lm.link_bw
+        if wait:
+            # host blocked until the last delivery; pipes are drained past
+            # this point, so backlogs collapse to zero for the next group
+            self._now_s = now + times[-1][1]
+
+    def quiesce(self):
+        """Idle the host until both device pipes drain.
+
+        Advances host time past every posted write / unwaited flush group,
+        so the next request group starts on idle pipes (zero backlog).
+        Queued-but-unexecuted reads are NOT forced — use :meth:`drain`.
+        """
+        self._now_s = max(self._now_s, self._ddr_free_s, self._link_free_s)
 
     # -- write path ----------------------------------------------------------
     def _post_write(self, req: WriteReq) -> Receipt:
-        """Execute one write and apply its receipt to the aggregate — the
-        single posting path shared by ``submit`` and ``submit_async``, so
-        the sync/async receipt-identity invariant cannot drift."""
-        rec = Receipt(key=req.key, op="write", kind=req.kind, tag=req.tag)
-        try:
-            self._do_write(req, rec)
-        finally:
-            # even on failure, whatever was committed stays counted
-            self.stats.apply(rec)
-        return rec
+        """Post one write (single-request convenience over _post_writes)."""
+        return self._post_writes([req])[0]
 
-    def _do_write(self, req: WriteReq, rec: Receipt) -> Receipt:
+    def _post_writes(self, reqs: Sequence[WriteReq]) -> List[Receipt]:
+        """Post a batch of writes as ONE encode slab — the single posting
+        path shared by ``submit`` and ``submit_async``, so the sync/async
+        receipt-identity invariant cannot drift.
+
+        Staging walks the requests in listed order, turning tensors into
+        fixed-size blocks and KV rows into transformed windows, but defers
+        pack + codec: every staged block lands in one slab that the layout
+        encodes in a few vectorized passes (``encode_batch``), mirroring
+        how queued reads share one decode slab.  Block commit order — and
+        therefore payload bytes, receipts and index entries — is identical
+        to encoding each request alone; the differential tests hold the
+        batched and scalar pipelines to byte-identity.
+
+        Writes are *posted* (CXL.mem semantics): they occupy the pipes but
+        the host does not wait, so their receipts carry schedule latency
+        while the busy-clock frontier advances past host `now`.
+        """
+        recs = [Receipt(key=r.key, op="write", kind=r.kind, tag=r.tag)
+                for r in reqs]
+        slab = _EncodeSlab()
+        try:
+            for req, rec in zip(reqs, recs):
+                self._stage_write(req, rec, slab)
+        finally:
+            try:
+                # even on a staging failure, everything staged so far must
+                # commit — sync semantics committed prior requests' blocks
+                self._encode_commit(slab)
+            finally:
+                lm = self.link_model
+                for rec in recs:
+                    rec.service_s = lm.latency(rec.dram_bytes_written,
+                                               rec.link_bytes_in)
+                self._schedule_group(
+                    recs,
+                    [(r.dram_bytes_written, r.link_bytes_in) for r in recs],
+                    wait=False,
+                )
+                for rec in recs:
+                    # whatever was committed stays counted
+                    self.stats.apply(rec)
+        return recs
+
+    def _stage_write(self, req: WriteReq, rec: Receipt, slab: "_EncodeSlab"):
         data = np.ascontiguousarray(req.data, dtype=np.uint16)
         rec.link_bytes_in += data.size * 2
         if req.kind == TENSOR:
             self._shapes[req.key] = data.shape
-            self._append_blocks(rec, req.key, data)
+            for chunk, valid in iter_blocks(data, self.block_elems):
+                slab.add(req.key, rec, chunk, valid)
         else:  # KV (kinds validated in submit)
             rows = data[None, :] if data.ndim == 1 else data
             self._kv_channels[req.key] = rows.shape[-1]
             if not self.layout.kv_transform:
                 # Word devices store the token-major stream verbatim in
                 # 4 KB blocks — no staging window, no transform.
-                self._append_blocks(rec, req.key, rows)
+                for chunk, valid in iter_blocks(rows, self.block_elems):
+                    slab.add(req.key, rec, chunk, valid)
             else:
                 buf = self._kv_staging.setdefault(req.key, [])
-                for row in rows.reshape(-1, rows.shape[-1]):
-                    buf.append(row)
+                flat = rows.reshape(-1, rows.shape[-1])
+                nrows, i = flat.shape[0], 0
+                while i < nrows:
+                    if not buf and nrows - i >= self.kv_window:
+                        # whole window in one request (page spill, prefill
+                        # flush): stage the contiguous slice directly, no
+                        # row buffering
+                        slab.add(req.key, rec, None,
+                                 self.kv_window * flat.shape[1],
+                                 kv_window=np.ascontiguousarray(
+                                     flat[i : i + self.kv_window]))
+                        i += self.kv_window
+                        continue
+                    take = min(self.kv_window - len(buf), nrows - i)
+                    buf.extend(flat[i : i + take])
+                    i += take
                     if len(buf) >= self.kv_window:
-                        self._commit_kv_window(rec, req.key)
+                        self._stage_kv_window(rec, req.key, slab)
                 if req.flush and buf:
-                    self._commit_kv_window(rec, req.key)
-        rec.service_s = rec.latency_s = self.link_model.latency(
-            rec.dram_bytes_written, rec.link_bytes_in
-        )
-        return rec
+                    self._stage_kv_window(rec, req.key, slab)
 
-    def _append_blocks(self, rec: Receipt, key: str, data: np.ndarray):
-        chunks, valids = [], []
-        for chunk, valid in iter_blocks(data, self.block_elems):
-            chunks.append(chunk)
-            valids.append(valid)
-        encoded = self.layout.encode_batch(chunks, self.codec)
-        for (payloads, flags), chunk, valid in zip(encoded, chunks, valids):
-            self._commit(rec, key, _Block(payloads, flags, valid, chunk.size))
+    def _stage_kv_window(self, rec: Receipt, stream: str,
+                         slab: "_EncodeSlab"):
+        """Claim the staged window now (ordering is per-stream), but defer
+        the exponent-delta transform: it is independent per window, so it
+        joins the posting group's batched passes at encode time."""
+        buf = self._kv_staging[stream]
+        window = np.stack(buf, axis=0)
+        buf.clear()  # in place — _stage_write holds a reference to this list
+        slab.add(stream, rec, None, window.size, kv_window=window)
+
+    def _encode_commit(self, slab: "_EncodeSlab"):
+        """Run the posting group's deferred passes — KV transform, plane
+        pack, codec — and commit blocks in staging order."""
+        if not slab.chunks:
+            return
+        self._transform_kv_windows(slab)
+        enc = (self.layout.encode_batch if self.batched_encode
+               else self.layout.encode_batch_scalar)
+        encoded = enc(slab.chunks, self.codec)
+        for (payloads, flags), key, rec, chunk, valid, meta in zip(
+                encoded, slab.keys, slab.recs, slab.chunks, slab.valids,
+                slab.metas):
+            self._commit(rec, key,
+                         _Block(payloads, flags, valid, chunk.size,
+                                kv_meta=meta))
+        slab.clear()
+
+    def _transform_kv_windows(self, slab: "_EncodeSlab"):
+        """Resolve deferred KV windows into transformed chunks + metas.
+
+        Batched mode groups same-shape windows through one
+        ``kv_forward_batch`` (vectorized modal-exponent + zigzag); the
+        scalar reference transforms per window — identical outputs, the
+        parity tests compare them.
+        """
+        pend = [i for i, w in enumerate(slab.kv_windows) if w is not None]
+        if not pend:
+            return
+
+        def _pad(t: np.ndarray) -> np.ndarray:
+            return (np.pad(t, (0, 8 - t.size % 8)) if t.size % 8 else t)
+
+        if not self.batched_encode:
+            for i in pend:
+                transformed, meta = kv_forward(slab.kv_windows[i])
+                slab.chunks[i] = _pad(transformed)
+                slab.metas[i] = meta
+                slab.kv_windows[i] = None
+            return
+        groups: Dict[tuple, List[int]] = {}
+        for i in pend:
+            groups.setdefault(slab.kv_windows[i].shape, []).append(i)
+        for shape, idxs in groups.items():
+            streams, metas = kv_forward_batch(
+                np.stack([slab.kv_windows[i] for i in idxs])
+            )
+            for i, row, meta in zip(idxs, streams, metas):
+                slab.chunks[i] = _pad(row)
+                slab.metas[i] = meta
+                slab.kv_windows[i] = None
 
     def _commit(self, rec: Receipt, key: str, block: _Block):
         self._tensors.setdefault(key, []).append(block)
@@ -743,19 +1075,17 @@ class TierStore:
         rec.dram_bytes_stored += block.stored_bytes
         rec.dram_bytes_written += block.stored_bytes
         rec.raw_bytes_stored += block.valid_elems * 2
+        if self.layout.uses_codec:
+            rec.codec_blocks += len(block.flags)
+            rec.codec_bypass += sum(
+                1 for f in block.flags if f == codecs.RAW)
 
     def _commit_kv_window(self, rec: Receipt, stream: str):
-        # only kv_transform layouts stage windows (see _do_write)
-        buf = self._kv_staging[stream]
-        window = np.stack(buf, axis=0)
-        buf.clear()  # in place — _do_write holds a reference to this list
-        transformed, meta = kv_forward(window)
-        n = transformed.size
-        if n % 8:
-            transformed = np.pad(transformed, (0, 8 - n % 8))
-        (payloads, flags), = self.layout.encode_batch([transformed], self.codec)
-        self._commit(rec, stream,
-                     _Block(payloads, flags, n, transformed.size, kv_meta=meta))
+        """Immediate (non-deferred) window commit for the read path's
+        implicit flush and the legacy ``flush_kv`` shim."""
+        slab = _EncodeSlab()
+        self._stage_kv_window(rec, stream, slab)
+        self._encode_commit(slab)
 
     # -- read path -----------------------------------------------------------
     def _do_reads(self, reqs: Sequence[ReadReq]) -> List[Receipt]:
@@ -853,7 +1183,7 @@ class TierStore:
         # In-flight reads were issued against the key's current mapping;
         # complete them before the mapping disappears.
         if self._queue:
-            self._flush_queue(len(self._queue))
+            self._flush_queue(len(self._queue), wait=True)
         for b in self._tensors.pop(key, []):
             self.stats.dram_bytes_stored -= b.stored_bytes
             self.stats.raw_bytes_stored -= b.valid_elems * 2
@@ -881,7 +1211,7 @@ class TierStore:
             # sync entry point: queued reads observe program order (they
             # would otherwise absorb this commit into their own receipts)
             if self._queue:
-                self._flush_queue(len(self._queue))
+                self._flush_queue(len(self._queue), wait=True)
             rec = Receipt(key=stream, op="write", kind=KV)
             self._commit_kv_window(rec, stream)
             self.stats.apply(rec)

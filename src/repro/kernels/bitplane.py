@@ -27,6 +27,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.bitplane import BF16_BITS
@@ -80,6 +81,55 @@ def _unpack_kernel(planes_ref, out_ref, *, keep_mask: int, cut: int,
         special_out = jnp.where(nan_lost, special_out | 0x40, special_out)
         u = jnp.where(is_special, special_out, sign | mag_r)
     out_ref[...] = (u & keep_mask).astype(jnp.uint16)
+
+
+def _accel_backend() -> str:
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - no runtime available
+        return "cpu"
+
+
+def pack_planes_slab(flat_u16, force: str | None = None):
+    """Pack a flat ``(n,)`` uint16 encode slab to ``(16, n // 8)`` uint8
+    planes — the write-side pack primitive of the batched encode pipeline.
+
+    Dispatch: on an accelerator backend (TPU/GPU) the slab is reshaped to
+    a 2-D tile and packed by :func:`pack_planes_pallas` (compiled; the
+    bit-matrix transpose never leaves VMEM); anywhere else the numpy
+    :func:`~repro.core.bitplane.pack_planes` path runs.  Both produce the
+    same bytes — plane streams are element-order packed, so a row-major
+    ``(R, C)`` reshape concatenates back to the flat stream exactly.
+
+    ``force``: ``"numpy"`` pins the fallback; ``"pallas"`` pins the kernel
+    (interpret mode off-accelerator — used by the equivalence tests).
+    """
+    from ..core.bitplane import pack_planes
+
+    flat = np.asarray(flat_u16, dtype=np.uint16).ravel()
+    n = flat.size
+    if n % 8:
+        raise ValueError(f"slab length {n} not a multiple of 8")
+    backend = _accel_backend()
+    use_pallas = (force == "pallas"
+                  or (force is None and backend in ("tpu", "gpu")))
+    if not use_pallas or n == 0:
+        return pack_planes(flat)
+    # factor n into (R, C) with C % 8 == 0; fall back if n is too ragged
+    for C in (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8):
+        if n % C == 0:
+            break
+    else:
+        return pack_planes(flat)
+    R = n // C
+    for br in (DEFAULT_BLOCK_R, 32, 16, 8, 4, 2, 1):
+        if R % br == 0:
+            break
+    planes = pack_planes_pallas(
+        jnp.asarray(flat.reshape(R, C)), block_r=br,
+        interpret=backend not in ("tpu", "gpu"),
+    )
+    return np.asarray(planes).reshape(BF16_BITS, n // 8)
 
 
 def pack_planes_pallas(x_u16: jnp.ndarray, block_r: int = DEFAULT_BLOCK_R,

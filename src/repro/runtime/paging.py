@@ -149,15 +149,27 @@ class KVPagePool:
     def append_page(self, layer: int, kind: str, start: int,
                     tokens_u16: np.ndarray, importance: float = 0.0):
         """Commit one full page (token-major (n, C) uint16)."""
-        key = f"{self.key_prefix}L{layer}.{kind}.{start}"
-        page = _Page(key, layer, kind, start, tokens_u16.shape[0],
-                     importance=importance)
-        # Always admit to HBM first, then evict the least-important pages
-        # (possibly this one) — importance, not arrival order, decides
-        # residency (paper §II-C: importance is long-tailed).
-        page.resident = tokens_u16.copy()
-        self._hbm_used += tokens_u16.size * 2
-        self._pages.append(page)
+        self.append_pages([(layer, kind, start, tokens_u16, importance)])
+
+    def append_pages(self, pages: Sequence[tuple]):
+        """Commit a batch of pages — ``(layer, kind, start, tokens_u16,
+        importance)`` each — with ONE eviction pass at the end.
+
+        A commit boundary admits every layer's K and V windows at once;
+        batching them turns the resulting spill into one write batch, which
+        the device encodes as a single vectorized slab (pack + codec a few
+        passes for the whole group) instead of per-page pipelines.
+        """
+        for layer, kind, start, tokens_u16, importance in pages:
+            key = f"{self.key_prefix}L{layer}.{kind}.{start}"
+            page = _Page(key, layer, kind, start, tokens_u16.shape[0],
+                         importance=importance)
+            # Always admit to HBM first, then evict the least-important
+            # pages (possibly this one) — importance, not arrival order,
+            # decides residency (paper §II-C: importance is long-tailed).
+            page.resident = tokens_u16.copy()
+            self._hbm_used += tokens_u16.size * 2
+            self._pages.append(page)
         self._rebalance()
 
     def _rebalance(self):

@@ -135,6 +135,11 @@ class ServeEngine:
         kv_keys = [k for k in ("k", "v", "c_kv") if k in layers]
         if not kv_keys:
             return  # SSM/hybrid: constant-size state, nothing paged
+        # Gather every completed window across layers and kinds into one
+        # batched admission: the spill this triggers goes to the device as
+        # one write batch → one vectorized encode slab, instead of a
+        # per-page pack+codec pipeline.
+        batch_pages = []
         for start in range(lo - lo % self.page_tokens, hi, self.page_tokens):
             if start + self.page_tokens > hi:
                 break
@@ -147,9 +152,11 @@ class ServeEngine:
                     u16 = np.ascontiguousarray(tok).view(np.uint16)
                     # recency as default importance; attention-mass updates
                     # arrive via pool.update_importance
-                    self.pool.append_page(
-                        layer, kind, start, u16, importance=float(start)
+                    batch_pages.append(
+                        (layer, kind, start, u16, float(start))
                     )
+        if batch_pages:
+            self.pool.append_pages(batch_pages)
         self._issue_readback()
 
     def _issue_readback(self):

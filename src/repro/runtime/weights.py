@@ -50,11 +50,31 @@ class WeightStore:
 
     # -- write once ------------------------------------------------------------
     def put(self, name: str, w: np.ndarray, importance: float = 1.0):
+        self.put_many({name: (w, importance)})
+
+    def put_many(self, units: Dict[str, tuple]):
+        """Load a batch of units — ``name -> (array, importance)`` — in one
+        submit.
+
+        The model-load path is write-heavy by construction (every unit
+        streams through the tier exactly once); batching the WriteReqs
+        lets the device encode the whole load as a few vectorized slab
+        passes instead of a per-unit pack+codec pipeline.
+        """
         import ml_dtypes
 
-        u16 = np.ascontiguousarray(w, dtype=ml_dtypes.bfloat16).view(np.uint16)
-        self.device.submit([WriteReq(name, u16, tag=name)])
-        self._units[name] = UnitMeta(name, w.shape, importance)
+        reqs, metas = [], []
+        for name, (w, importance) in units.items():
+            u16 = np.ascontiguousarray(
+                w, dtype=ml_dtypes.bfloat16).view(np.uint16)
+            reqs.append(WriteReq(name, u16, tag=name))
+            metas.append(UnitMeta(name, np.shape(w), importance))
+        if reqs:
+            self.device.submit(reqs)
+            # register only after the store accepted the batch, so a
+            # failed submit cannot leave metadata for absent units
+            for meta in metas:
+                self._units[meta.name] = meta
 
     def set_importance(self, scores: Dict[str, float]):
         for k, v in scores.items():

@@ -252,11 +252,13 @@ def test_delete_completes_inflight_reads_first():
 def test_queue_delay_and_overlap_latency_model():
     """Receipts in one flush group share the pipes: completion times are
     monotone, each request's latency >= its serialized service, delay 0 on
-    the group head, and the group completes faster than serial service."""
+    the group head (pipes quiesced), and the group completes faster than
+    serial service."""
     dev = make_device("trace", kv_window=32, window=64)
     dev.submit([WriteReq(f"p{i}", synth.kv_cache(32, 128, seed=80 + i),
                          kind=KV) for i in range(8)])
-    recs = dev.drain(dev.submit_async(
+    dev.quiesce()     # writes are posted; idle the pipes so the read
+    recs = dev.drain(dev.submit_async(   # group starts on a clean clock
         [ReadReq(f"p{i}", kind=KV) for i in range(8)]
     ))
     lats = [r.latency_s for r in recs]
@@ -275,6 +277,52 @@ def test_queue_delay_and_overlap_latency_model():
         cum_d, cum_l = cum_d + d, cum_l + l
         want = lm.base_s + max(cum_d / lm.ddr_bw, cum_l / lm.link_bw)
         assert r.latency_s == pytest.approx(want)
+
+
+def test_busy_clock_prices_cross_group_contention():
+    """The device-global busy clock (ROADMAP open item): pipe occupancy
+    left by groups the host never waited for — posted writes, window
+    overflow flushes — delays LATER groups, while a host that waits (or
+    quiesces) starts the next group on idle pipes.  Accounting stays
+    exact: receipts-sum == DeviceStats regardless of latency pricing."""
+    def fresh(window=2):
+        dev = make_device("trace", kv_window=16, window=window)
+        recs = dev.submit([WriteReq(f"p{i}", synth.kv_cache(16, 64,
+                                                            seed=90 + i),
+                                    kind=KV) for i in range(6)])
+        return dev, recs
+
+    # 1) posted writes leave backlog: an immediate read queues behind it,
+    #    a quiesced read does not — same bytes, different delay
+    dev_a, wrecs_a = fresh()
+    busy, = dev_a.submit([ReadReq("p0", kind=KV)])
+    dev_b, wrecs_b = fresh()
+    dev_b.quiesce()
+    idle, = dev_b.submit([ReadReq("p0", kind=KV)])
+    assert busy.queue_delay_s > 0.0
+    assert idle.queue_delay_s == 0.0
+    assert busy.service_s == idle.service_s
+    assert busy.latency_s == pytest.approx(
+        busy.queue_delay_s + busy.service_s)
+    # writes themselves price intra-group pipe sharing: later writes of
+    # the posting group waited on earlier ones
+    assert wrecs_a[0].queue_delay_s == 0.0
+    assert all(r.queue_delay_s > 0 for r in wrecs_a[1:])
+
+    # 2) window-overflow groups carry occupancy forward: with the host
+    #    never waiting, the second flush group's head is delayed by the
+    #    first group's residual
+    dev_c, _ = fresh(window=2)
+    dev_c.quiesce()
+    tickets = []
+    for i in range(5):   # window=2 → overflow flushes groups of 2
+        tickets += dev_c.submit_async([ReadReq(f"p{i}", kind=KV)])
+    heads = [t.wait() for t in tickets]
+    assert heads[0].queue_delay_s == 0.0          # first group, idle pipes
+    assert heads[2].queue_delay_s > 0.0           # second group head queued
+    # 3) conservation is latency-independent
+    recs = wrecs_a + [busy]
+    assert _sum_receipts(recs) == _stats_dict(dev_a.stats)
 
 
 # ---------------------------------------------------------------------------
@@ -354,6 +402,42 @@ def random_ops(rng, n_ops=24, n_keys=4):
 def test_random_interleavings_differential(layout, seed):
     rng = np.random.default_rng(seed)
     run_interleaving_differential(layout, random_ops(rng))
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_write_heavy_async_interleaving_differential(layout):
+    """Write-heavy async traffic (multi-write posting groups interleaved
+    with queued reads — the prefill-spill / multi-stream-eviction shape):
+    slab-batched write posting through ``submit_async`` must stay byte-
+    and stats-identical to a sync-only device issuing one request at a
+    time, across partial-window KV appends and a small read window."""
+    rng = np.random.default_rng(7)
+    sync_dev = TierStore(layout=layout, kv_window=8, window=3)
+    async_dev = TierStore(layout=layout, kv_window=8, window=3)
+    tickets, expected = [], []
+    for round_ in range(6):
+        # a burst of writes — several streams + a tensor — in ONE async
+        # call (one encode slab), vs one-by-one sync submits
+        writes = [
+            WriteReq(f"s{round_}.{j}",
+                     synth.kv_cache(4 + 4 * (j % 3), 16,
+                                    seed=100 * round_ + j),
+                     kind=KV, flush=(j % 2 == 0))
+            for j in range(3)
+        ] + [WriteReq(f"t{round_}", synth.weights(1024 * (1 + round_ % 3),
+                                                  seed=round_))]
+        for w in writes:
+            sync_dev.submit([w])
+        async_dev.submit_async(writes)
+        # interleave async reads over earlier rounds' keys
+        if round_ >= 1:
+            key = f"s{round_ - 1}.0"
+            want, = sync_dev.submit([ReadReq(key, kind=KV)])
+            tickets += async_dev.submit_async([ReadReq(key, kind=KV)])
+            expected.append(want.data)
+    for t, want in zip(tickets, expected):
+        np.testing.assert_array_equal(t.wait().data, want)
+    assert _stats_dict(sync_dev.stats) == _stats_dict(async_dev.stats)
 
 
 # ---------------------------------------------------------------------------
