@@ -27,6 +27,12 @@ group goes through the library's multi-frame API when available.  Payloads
 are byte-identical to per-block :func:`compress_block` calls by
 construction (per-block hash tables, per-block emit), which the encode
 differential tests assert.
+
+Contract: every compressed payload round-trips byte-exactly
+(``decompress_block(compress_block(x)) == x``); batch entry points are
+byte-identical per block to their scalar counterparts; a ``RAW`` flag
+always means the stored payload IS the input bytes.  Callers (the layout
+strategies in ``core.tier``) rely on all three.
 """
 
 from __future__ import annotations

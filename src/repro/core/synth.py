@@ -15,6 +15,10 @@ structural properties the paper measures (Fig. 2):
 * A second KV source runs an actual forward pass of a (random-init) model
   from this repo — see tests/benchmarks — to confirm results don't hinge
   on the AR(1) synthesiser.
+* Serving traces: :func:`poisson_arrivals` / :func:`bursty_arrivals` /
+  :func:`request_trace` generate the many-user request arrival processes
+  the continuous-batching scheduler consumes (offered load measured in
+  requests per scheduler decode round).
 """
 
 from __future__ import annotations
@@ -83,6 +87,77 @@ def weights(
         s = np.abs(w).max() / 7.0
         w = np.clip(np.round(w / s), -8, 7) * s
     return w.astype(ml_dtypes.bfloat16).view(np.uint16)
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """``n`` request arrival times under a Poisson process.
+
+    ``rate`` is the offered load in requests per scheduler decode round
+    (the :class:`~repro.runtime.serving.ServeScheduler` clock unit);
+    inter-arrival gaps are i.i.d. exponential with mean ``1/rate``.
+    Returns a sorted float array of arrival times starting near 0.
+    """
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def bursty_arrivals(n: int, rate: float, burst: int = 4,
+                    seed: int = 0) -> np.ndarray:
+    """``n`` arrival times in Poisson-spaced bursts of ``burst`` requests.
+
+    Bursts arrive as a Poisson process at ``rate / burst`` so the mean
+    offered load matches :func:`poisson_arrivals` at the same ``rate``,
+    but requests land in simultaneous clumps — the flash-crowd pattern
+    that stresses KV-capacity-aware admission (every member of a burst
+    contends for the same pool + tier headroom at once).
+    """
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    n_bursts = -(-n // burst)
+    starts = poisson_arrivals(n_bursts, rate / burst, seed=seed)
+    return np.repeat(starts, burst)[:n]
+
+
+def request_trace(
+    n_requests: int,
+    vocab: int,
+    rate: float = 0.25,
+    kind: str = "poisson",
+    prompt_len: int = 32,
+    new_tokens: int = 8,
+    batch: int = 1,
+    burst: int = 4,
+    seed: int = 0,
+) -> list:
+    """Synthetic serving trace: one dict per request, sorted by arrival.
+
+    Each entry carries ``arrival`` (float, scheduler decode rounds),
+    ``prompt`` (``(batch, prompt_len)`` int32 token ids), ``max_new_tokens``
+    and a per-request ``seed`` — exactly the fields
+    :class:`~repro.runtime.serving.ServeRequest` takes, without this
+    module importing the runtime.  ``kind`` selects the arrival process
+    (``"poisson"`` or ``"bursty"``).
+    """
+    if kind == "poisson":
+        arrivals = poisson_arrivals(n_requests, rate, seed=seed)
+    elif kind == "bursty":
+        arrivals = bursty_arrivals(n_requests, rate, burst=burst, seed=seed)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}")
+    rng = np.random.default_rng(seed + 1)
+    return [
+        {
+            "arrival": float(t),
+            "prompt": rng.integers(0, vocab, (batch, prompt_len)).astype(
+                np.int32
+            ),
+            "max_new_tokens": new_tokens,
+            "seed": seed + 1000 + i,
+        }
+        for i, t in enumerate(arrivals)
+    ]
 
 
 def quantized_bits(u16_bf16: np.ndarray, fmt: str) -> np.ndarray:

@@ -46,6 +46,13 @@ Legacy shims (``write_tensor`` / ``read_tensor`` / ``write_kv`` /
 kept so existing call sites keep working; new code should submit request
 batches directly.
 
+Namespaces: multi-stream consumers prefix their keys with a per-stream /
+per-request namespace (``s0.``, ``r17.``).  :meth:`TierStore.delete_prefix`
+retires a whole namespace in one call — blocks, staged KV windows and
+index-cache entries — returning its stored capacity to ``stats``; this is
+how the continuous-batching scheduler frees a finished request's pages
+for queued admissions.
+
 Asynchronous submission (the queued front-end):
 
 ``submit_async(requests) -> list[Ticket]`` enqueues a batch without
@@ -361,6 +368,19 @@ class _IndexCache:
         if len(self._lru) > self.capacity:
             self._lru.pop(next(iter(self._lru)))
         return hit
+
+    def evict_stream(self, stream: str):
+        """Drop every cached entry of one stream key (entries are
+        ``(stream, block_index)`` tuples) — deleting a key must not leave
+        dangling index entries that a later same-named key would "hit"."""
+        for k in [k for k in self._lru if k[0] == stream]:
+            self._lru.pop(k)
+
+    def evict_prefix(self, prefix: str):
+        """Drop every cached entry whose stream key starts with ``prefix``
+        (one LRU pass for a whole-namespace delete)."""
+        for k in [k for k in self._lru if k[0].startswith(prefix)]:
+            self._lru.pop(k)
 
 
 # ---------------------------------------------------------------------------
@@ -1184,12 +1204,46 @@ class TierStore:
         # complete them before the mapping disappears.
         if self._queue:
             self._flush_queue(len(self._queue), wait=True)
+        self._forget(key)
+
+    def _forget(self, key: str, evict_index: bool = True):
+        """Drop one key's blocks, staging, shape and index entries,
+        returning the stored capacity to the device (queue already
+        flushed by the caller).  ``evict_index=False`` lets a namespace
+        delete purge the index cache in one pass instead of per key."""
         for b in self._tensors.pop(key, []):
             self.stats.dram_bytes_stored -= b.stored_bytes
             self.stats.raw_bytes_stored -= b.valid_elems * 2
             self.stats.blocks -= 1
         self._shapes.pop(key, None)
         self._kv_staging.pop(key, None)
+        self._kv_channels.pop(key, None)
+        if evict_index:
+            self._index.evict_stream(key)
+
+    def delete_prefix(self, prefix: str) -> int:
+        """Delete every key in one namespace (``key.startswith(prefix)``).
+
+        This is the retirement path of the continuous-batching scheduler:
+        a finished request's pages live under a per-request key prefix, and
+        one call frees its blocks, staged windows, shapes, KV-channel
+        metadata and index-cache entries, returning the stored capacity to
+        ``stats`` so the pool can admit queued requests into the headroom.
+        Queued reads (any stream's) are drained first, exactly like
+        :meth:`delete` — per-key program order means the flush cannot
+        change any surviving stream's bytes.  Returns the number of keys
+        deleted.  An empty prefix clears the whole device.
+        """
+        if self._queue:
+            self._flush_queue(len(self._queue), wait=True)
+        keys = {k for k in self._tensors if k.startswith(prefix)}
+        keys.update(k for k in self._kv_staging if k.startswith(prefix))
+        keys.update(k for k in self._kv_channels if k.startswith(prefix))
+        keys.update(k for k in self._shapes if k.startswith(prefix))
+        for k in keys:
+            self._forget(k, evict_index=False)
+        self._index.evict_prefix(prefix)
+        return len(keys)
 
     # -- legacy shims (deprecated; forward to submit) ------------------------
     def write_tensor(self, name: str, u16: np.ndarray):

@@ -5,11 +5,15 @@ KV compression ratio, and the implied tok/s ceiling for each device kind —
 the end-to-end integration of the paper's two mechanisms.  Spill readback
 goes through the tier's queued async front-end by default (``--sync-io``
 reverts to serialized submits); ``--streams N`` serves N sequences that
-share one device queue.
+share one device queue; ``--num-requests N`` switches to the
+continuous-batching scheduler (Poisson/bursty arrivals, capacity-aware
+admission, retirement frees tier pages).
 
 Usage (CPU demo):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --tokens 64 --device trace --streams 2
+  PYTHONPATH=src python -m repro.launch.serve --num-requests 8 \
+      --arrival-rate 0.5 --max-batch 2
 """
 
 from __future__ import annotations
@@ -20,9 +24,42 @@ import jax
 import numpy as np
 
 from ..configs import ARCHS, smoke_config
+from ..core import synth
 from ..models.model import init_params
-from ..runtime import MultiStreamEngine, PAPER_POLICY, ServeEngine
+from ..runtime import (
+    MultiStreamEngine, PAPER_POLICY, ServeEngine, ServeScheduler,
+)
 from ..runtime.paging import LOSSLESS_POLICY
+
+EPILOG = """\
+serving modes (and the benchmark figure each corresponds to):
+
+  sync single-stream     --sync-io                 serialized spill readback;
+                                                   the fig12 baseline every
+                                                   overlap win is measured
+                                                   against
+  async single-stream    (default)                 readback tickets ride the
+                                                   in-flight window across
+                                                   the jitted decode step —
+                                                   fig12's decode/fetch
+                                                   overlap at long context
+  multi-stream           --streams N               N sequences share ONE
+                                                   device queue: cross-stream
+                                                   coalesced slab decodes,
+                                                   busy-clock queue delay —
+                                                   fig12's async-vs-sync
+                                                   multi-stream tok/s
+  continuous batching    --num-requests N          request arrival/departure
+                         [--arrival-rate R]        over the shared queue:
+                         [--max-batch M]           FIFO + KV-capacity-aware
+                         [--arrival-kind K]        admission, retire frees
+                         [--kv-capacity B]         pages — fig12_14's
+                                                   throughput + p50/p99
+                                                   latency vs offered load
+
+All modes keep per-sequence outputs bit-identical to a solo run of the
+same request; see docs/ARCHITECTURE.md for the dataflow.
+"""
 
 
 def serve(
@@ -88,8 +125,59 @@ def serve(
     return eng, toks
 
 
+def serve_continuous(
+    arch: str = "qwen2-0.5b",
+    smoke: bool = True,
+    device: str = "trace",
+    num_requests: int = 8,
+    arrival_rate: float = 0.5,
+    arrival_kind: str = "poisson",
+    max_batch: int = 2,
+    prompt_len: int = 32,
+    n_tokens: int = 8,
+    batch: int = 1,
+    hbm_kv_budget: int = 1 << 12,
+    page_tokens: int = 16,
+    kv_capacity_bytes: int | None = None,
+    lossless_only: bool = False,
+    async_io: bool = True,
+    seed: int = 0,
+):
+    """Continuous-batching mode: run a synthetic arrival trace through the
+    ServeScheduler and report throughput + latency percentiles."""
+    cfg = ARCHS[arch]
+    if smoke:
+        cfg = smoke_config(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    policy = LOSSLESS_POLICY if lossless_only else PAPER_POLICY
+    trace = synth.request_trace(
+        num_requests, cfg.vocab, rate=arrival_rate, kind=arrival_kind,
+        prompt_len=prompt_len, new_tokens=n_tokens, batch=batch, seed=seed,
+    )
+    sched = ServeScheduler(
+        cfg, params, max_batch=max_batch, device_kind=device, policy=policy,
+        batch=batch, page_tokens=page_tokens, hbm_kv_budget=hbm_kv_budget,
+        kv_capacity_bytes=kv_capacity_bytes, async_io=async_io,
+    )
+    rep = sched.run(trace)
+    d = sched.device_stats()
+    print(f"[serve] arch={arch} device={device} continuous batching: "
+          f"{num_requests} requests, {arrival_kind} rate {arrival_rate}/round, "
+          f"max_batch {max_batch}")
+    print(f"[serve] {rep.steps} rounds, {rep.decode_tokens} decode tokens in "
+          f"{rep.model_time_s * 1e3:.2f} modeled ms → {rep.tok_s:.1f} tok/s")
+    print(f"[serve] latency p50 {rep.p50_latency_s * 1e3:.2f} ms, "
+          f"p99 {rep.p99_latency_s * 1e3:.2f} ms, mean queue delay "
+          f"{rep.mean_queue_delay_s * 1e3:.2f} ms")
+    print(f"[serve] tier after retirement: stored {d.dram_bytes_stored} B, "
+          f"{d.blocks} blocks (retired requests freed their namespaces)")
+    return sched, rep
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=EPILOG, formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--arch", default="qwen2-0.5b", choices=sorted(ARCHS))
     ap.add_argument("--device", default="trace",
                     choices=["plain", "gcomp", "trace"])
@@ -101,7 +189,32 @@ def main():
     ap.add_argument("--sync-io", action="store_true",
                     help="serialize spill readback (disable the async queue)")
     ap.add_argument("--lossless-only", action="store_true")
+    ap.add_argument("--num-requests", type=int, default=0,
+                    help="run the continuous-batching scheduler on a "
+                         "synthetic trace of this many requests")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="offered load, requests per decode round")
+    ap.add_argument("--arrival-kind", default="poisson",
+                    choices=["poisson", "bursty"])
+    ap.add_argument("--max-batch", type=int, default=2,
+                    help="scheduler batch slots (active requests)")
+    ap.add_argument("--kv-capacity", type=int, default=0,
+                    help="logical-KV admission capacity in bytes "
+                         "(0 = unlimited)")
     args = ap.parse_args()
+    if args.num_requests > 0:
+        if args.streams > 1:
+            print("[serve] note: --streams is ignored in continuous-"
+                  "batching mode (concurrency comes from --max-batch)")
+        serve_continuous(
+            arch=args.arch, device=args.device,
+            num_requests=args.num_requests, arrival_rate=args.arrival_rate,
+            arrival_kind=args.arrival_kind, max_batch=args.max_batch,
+            prompt_len=args.prompt_len, n_tokens=args.tokens,
+            batch=args.batch, kv_capacity_bytes=args.kv_capacity or None,
+            async_io=not args.sync_io, lossless_only=args.lossless_only,
+        )
+        return
     serve(arch=args.arch, device=args.device, n_tokens=args.tokens,
           prompt_len=args.prompt_len, batch=args.batch,
           streams=args.streams, async_io=not args.sync_io,

@@ -1,6 +1,11 @@
 from .paging import KVPagePool, PagePolicy, PAPER_POLICY
-from .serving import MultiStreamEngine, ServeEngine, ServeStats
+from .serving import (
+    MultiStreamEngine, RequestRecord, SchedulerReport, ServeEngine,
+    ServeRequest, ServeScheduler, ServeStats, projected_kv_bytes,
+)
 from .weights import WeightStore
 
 __all__ = ["KVPagePool", "PagePolicy", "PAPER_POLICY", "MultiStreamEngine",
-           "ServeEngine", "ServeStats", "WeightStore"]
+           "RequestRecord", "SchedulerReport", "ServeEngine", "ServeRequest",
+           "ServeScheduler", "ServeStats", "WeightStore",
+           "projected_kv_bytes"]

@@ -340,6 +340,41 @@ class KVPagePool:
                for p in pages]
         return np.concatenate(out, axis=0) if out else np.empty((0, 0), np.uint16)
 
+    # -- teardown ---------------------------------------------------------------
+    def release(self) -> int:
+        """Retire this pool: free every page and tear down its namespace.
+
+        Outstanding prefetch tickets are settled first (their receipts
+        fold into this pool's accounting exactly once), then every key the
+        pool ever wrote is deleted from the device in one
+        :meth:`TierStore.delete_prefix` call — blocks, staged partial
+        windows and index entries — so the stored capacity returns to the
+        device for the next admitted request.  HBM-resident pages are
+        dropped and ``hbm_bytes`` goes to zero.  Returns the number of
+        device keys freed.
+
+        The pool's traffic receipts (``page_traffic``, ``io_service_s``)
+        survive release — a retired request's accounting is still part of
+        the serving record.  Pools sharing a device must use distinct
+        prefixes (the scheduler namespaces per request: ``r{id}.``); with
+        an EMPTY ``key_prefix`` only this pool's own page keys are
+        deleted, never the rest of a shared device.
+        """
+        for entry in self._prefetched.values():
+            self._settle_prefetch(entry)
+        self._prefetched.clear()
+        if self.key_prefix:
+            freed = self.device.delete_prefix(self.key_prefix)
+        else:
+            keys = {p.key for p in self._pages}
+            for k in keys:
+                self.device.delete(k)
+            freed = len(keys)
+        self._pages.clear()
+        self.spill_events.clear()
+        self._hbm_used = 0
+        return freed
+
     # -- accounting ---------------------------------------------------------------
     @property
     def hbm_bytes(self) -> int:

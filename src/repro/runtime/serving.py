@@ -37,12 +37,23 @@ tickets accumulate in the shared window and the first stream to reach
 its next commit boundary drains them as one coalesced cross-stream flush
 group (see :meth:`KVPagePool.drain_reads`) — the many-stream sharing the
 ROADMAP calls for.
+
+Continuous batching: :class:`ServeScheduler` adds request
+arrival/departure on top of that sharing — requests from a synthetic
+trace (:func:`repro.core.synth.request_trace`) wait FIFO for a batch
+slot, prefill on admission (gated on projected KV capacity), decode
+round-robin with whoever else is active, and retire at the commit
+boundary of their last token, freeing their pages and tier namespace
+(:meth:`ServeEngine.retire`) for the next queued request.  Per-sequence
+outputs stay bit-identical to solo runs under dynamic membership — the
+contract every piece of this module preserves.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -288,6 +299,15 @@ class ServeEngine:
                 link_per_step / sys.cxl_link_bw, 1e-12)
         return min(1.0 / t, sys.cap_tok_s)
 
+    def retire(self) -> int:
+        """Finish this sequence: drain in-flight readback, then free every
+        page — HBM residents and the tier's per-stream key namespace — so
+        the capacity serves the next admitted request (continuous
+        batching's leave-at-commit-boundary).  Returns the number of tier
+        keys freed.  The engine must not decode after retirement."""
+        self.flush_io()
+        return self.pool.release()
+
 
 class MultiStreamEngine:
     """N independent sequences sharing one tier device queue.
@@ -358,3 +378,374 @@ class MultiStreamEngine:
         t = max(d.dram_bytes_read / steps / sys.cxl_ddr_bw,
                 d.link_bytes_out / steps / sys.cxl_link_bw, 1e-12)
         return min(1.0 / t, sys.cap_tok_s)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching — request arrival/departure over one shared device
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One serving request for the continuous-batching scheduler.
+
+    ``arrival`` is measured in scheduler decode rounds (the clock a
+    :func:`repro.core.synth.request_trace` produces); ``prompt`` is
+    ``(batch, prompt_len)`` int32 token ids; ``seed`` feeds the same
+    per-request sampling rng a solo :meth:`ServeEngine.generate` call
+    would use, which is what makes the differential guarantee testable.
+    """
+
+    req_id: int
+    arrival: float
+    prompt: np.ndarray
+    max_new_tokens: int
+    greedy: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle record the scheduler keeps per request.
+
+    Steps are scheduler clock ticks; ``t_*_s`` stamps are modeled seconds
+    (compute quantum ⊔ tier-I/O time per tick).  ``tokens`` is filled at
+    retirement with the ``(batch, max_new_tokens)`` generation.
+    """
+
+    req_id: int
+    arrival: float
+    kv_projected_bytes: int = 0
+    admit_step: int = -1
+    finish_step: int = -1
+    t_arrive_s: float = -1.0
+    t_admit_s: float = -1.0
+    t_finish_s: float = -1.0
+    prefill_tokens: int = 0
+    tokens: Optional[np.ndarray] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.tokens is not None
+
+    @property
+    def queue_delay_s(self) -> float:
+        """Arrival → admission wait (slot or KV-capacity contention)."""
+        return self.t_admit_s - self.t_arrive_s
+
+    @property
+    def latency_s(self) -> float:
+        """Arrival → last generated token, in modeled seconds."""
+        return self.t_finish_s - self.t_arrive_s
+
+
+@functools.lru_cache(maxsize=None)
+def _kv_bytes_per_token(cfg: ArchConfig, batch: int) -> int:
+    """Paged-KV bytes one committed token contributes, from the cache
+    spec (``jax.eval_shape`` — traced once per (cfg, batch), no
+    allocation)."""
+    spec = jax.eval_shape(lambda: init_cache(cfg, batch, 8))
+    layers = spec.get("layers", {})
+    total = 0
+    for kind in ("k", "v", "c_kv"):
+        if kind in layers:
+            shape = layers[kind].shape          # (L, B, S, ...channels)
+            per_token = int(np.prod(shape[3:])) if len(shape) > 3 else 1
+            total += int(shape[0]) * batch * per_token * 2
+    return total
+
+
+def projected_kv_bytes(cfg: ArchConfig, batch: int, total_tokens: int,
+                       page_tokens: int) -> int:
+    """Logical BF16 bytes of paged KV a ``total_tokens`` sequence commits.
+
+    Admission control needs the footprint BEFORE running the model, so
+    this derives it from the cache spec: every KV leaf
+    (``k``/``v``/``c_kv``) contributes ``n_layers * batch *
+    paged_tokens * per_token_channels * 2`` bytes, where
+    ``paged_tokens`` counts only completed page windows (partial tails
+    never reach the pool).  SSM/hybrid caches have no paged KV and
+    project to zero.
+    """
+    paged = (total_tokens // page_tokens) * page_tokens
+    return paged * _kv_bytes_per_token(cfg, batch) if paged > 0 else 0
+
+
+class _ActiveSeq:
+    """One admitted request: its engine, sampling rng and progress."""
+
+    __slots__ = ("req", "record", "engine", "rng", "logits", "out", "done")
+
+    def __init__(self, req: ServeRequest, record: RequestRecord,
+                 engine: ServeEngine, rng: np.random.Generator,
+                 logits: np.ndarray):
+        self.req = req
+        self.record = record
+        self.engine = engine
+        self.rng = rng
+        self.logits = logits
+        self.out: List[np.ndarray] = []
+        self.done = False
+
+
+@dataclasses.dataclass
+class SchedulerReport:
+    """End-of-run roll-up: per-request records + modeled aggregates."""
+
+    records: List[RequestRecord]
+    steps: int
+    model_time_s: float
+    decode_tokens: int
+    prefill_tokens: int
+
+    @property
+    def tok_s(self) -> float:
+        """Decode throughput over the modeled run (generated tokens only)."""
+        return self.decode_tokens / max(self.model_time_s, 1e-12)
+
+    def latency_percentile(self, q: float) -> float:
+        lats = [r.latency_s for r in self.records if r.finished]
+        return float(np.percentile(lats, q)) if lats else float("nan")
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.latency_percentile(99)
+
+    @property
+    def mean_queue_delay_s(self) -> float:
+        qs = [r.queue_delay_s for r in self.records if r.finished]
+        return float(np.mean(qs)) if qs else float("nan")
+
+
+class ServeScheduler:
+    """Continuous-batching request scheduler over one shared tier device.
+
+    Requests arrive on a synthetic trace (``arrival`` in decode rounds —
+    see :func:`repro.core.synth.request_trace`), wait FIFO for a batch
+    slot, run prefill-then-decode as a full :class:`ServeEngine` under a
+    per-request key namespace (``r{id}.``), and retire at the commit
+    boundary that produced their last token — :meth:`ServeEngine.retire`
+    frees HBM pages and deletes the request's tier namespace
+    (:meth:`TierStore.delete_prefix`), so the freed slot and KV capacity
+    admit the next queued request.  All active engines share ONE device
+    queue: their spill readback tickets coalesce into cross-request slab
+    decodes and the busy clock prices cross-request pipe contention, just
+    like :class:`MultiStreamEngine`.
+
+    Admission is KV-capacity-aware: with ``kv_capacity_bytes`` set, a
+    request joins only when the committed logical-KV projection of every
+    active request plus its own (:func:`projected_kv_bytes`) fits; the
+    queue does NOT bypass a blocked head-of-line request (strict FIFO).
+    A request too large for the whole capacity is still admitted when the
+    batch is empty, so the queue cannot deadlock.
+
+    The differential guarantee extends to dynamic membership: per-key
+    program order on the shared queue means each request's decoded tokens
+    are bit-identical to running it solo through
+    ``ServeEngine.generate(prompt, n, greedy, seed)`` at the same
+    ``max_seq`` — joins, leaves and capacity stalls change receipts'
+    latency (queue delay), never data.
+
+    Modeled time: every scheduler tick costs
+    ``max(1/cap_tok_s, tier I/O time of the tick)`` seconds — one batched
+    decode round at the compute ceiling, or the tick's DRAM/link transfer
+    time when the tier is the bottleneck (the regime Figs. 12-14 study).
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        device_kind: Union[str, TierStore] = "trace",
+        policy=None,
+        batch: int = 1,
+        page_tokens: int = 16,
+        hbm_kv_budget: int = 1 << 12,
+        max_seq: Optional[int] = None,
+        kv_capacity_bytes: Optional[int] = None,
+        async_io: bool = True,
+        sys: SystemSpec = SystemSpec(),
+    ):
+        from .paging import PAPER_POLICY as _paper
+
+        self.cfg = cfg
+        self.params = params
+        self.device = (make_device(device_kind)
+                       if isinstance(device_kind, str) else device_kind)
+        self.max_batch = max_batch
+        self.policy = _paper if policy is None else policy
+        self.batch = batch
+        self.page_tokens = page_tokens
+        self.hbm_kv_budget = hbm_kv_budget
+        self.kv_capacity_bytes = kv_capacity_bytes
+        self.async_io = async_io
+        self.sys = sys
+        self._max_seq = max_seq
+        self.pending: List[ServeRequest] = []
+        self.active: List[Optional[_ActiveSeq]] = [None] * max_batch
+        self.records: Dict[int, RequestRecord] = {}
+        self.clock = 0                  # scheduler ticks (decode rounds)
+        self.model_time_s = 0.0
+        self.kv_committed_bytes = 0     # projections of active requests
+        self._next_id = 0
+        self._io_mark = self._io_snapshot()
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, requests: Sequence[Union[ServeRequest, dict]]):
+        """Add requests (``ServeRequest`` or ``request_trace`` dicts) to
+        the arrival queue.  Ids are assigned to dict entries; the queue is
+        kept sorted by (arrival, id)."""
+        for r in requests:
+            if isinstance(r, dict):
+                r = ServeRequest(req_id=self._next_id, **r)
+            self._next_id = max(self._next_id, r.req_id + 1)
+            if r.max_new_tokens < 1:
+                raise ValueError("requests must generate at least one token")
+            if r.prompt.shape[0] != self.batch:
+                raise ValueError(
+                    f"prompt batch {r.prompt.shape[0]} != scheduler batch "
+                    f"{self.batch}"
+                )
+            if r.req_id in self.records:
+                raise ValueError(f"duplicate req_id {r.req_id}")
+            total = r.prompt.shape[-1] + r.max_new_tokens
+            need = total + self.page_tokens
+            if self._max_seq is None or self._max_seq < need:
+                self._max_seq = max(self._max_seq or 0, need)
+            self.records[r.req_id] = RequestRecord(
+                req_id=r.req_id, arrival=r.arrival,
+                kv_projected_bytes=projected_kv_bytes(
+                    self.cfg, self.batch, total, self.page_tokens),
+            )
+            self.pending.append(r)
+        self.pending.sort(key=lambda r: (r.arrival, r.req_id))
+
+    # -- one scheduler tick --------------------------------------------------
+    def step(self) -> bool:
+        """One commit-boundary round: admit arrivals into free slots, run
+        one decode step for every active sequence, advance the modeled
+        clock, retire finished sequences.  Returns True while work (queued
+        or active) remains; an idle tick (nothing arrived yet) still
+        advances both clocks.
+
+        Finished sequences' engine teardown (readback drain + namespace
+        delete) runs BEFORE the tick's time advance, so retirement I/O is
+        priced into the same tick — including the run's final tick, which
+        has no later tick to absorb it."""
+        self._admit()
+        self._decode_round()
+        for seq in self.active:
+            if seq is not None and seq.done:
+                seq.engine.retire()
+        self._advance_time()
+        self._retire()
+        self.clock += 1
+        return bool(self.pending or any(s is not None for s in self.active))
+
+    def run(self, requests: Optional[Sequence] = None,
+            max_steps: int = 1_000_000) -> SchedulerReport:
+        """Drive :meth:`step` until every submitted request has retired."""
+        if requests:
+            self.submit(requests)
+        while self.step():
+            max_steps -= 1
+            if max_steps <= 0:
+                raise RuntimeError("scheduler failed to drain")
+        return self.report()
+
+    def report(self) -> SchedulerReport:
+        done = [self.records[k] for k in sorted(self.records)
+                if self.records[k].finished]
+        return SchedulerReport(
+            records=done,
+            steps=self.clock,
+            model_time_s=self.model_time_s,
+            decode_tokens=sum(r.tokens.size for r in done),
+            prefill_tokens=sum(r.prefill_tokens for r in done),
+        )
+
+    # -- internals -----------------------------------------------------------
+    def _io_snapshot(self):
+        d = self.device.stats
+        return (d.dram_bytes_read + d.dram_bytes_written,
+                d.link_bytes_in + d.link_bytes_out)
+
+    def _admit(self):
+        # Stamp every request the trace has delivered by now: queueing
+        # delay starts at arrival, not at admission.
+        for r in self.pending:
+            if r.arrival > self.clock:
+                break
+            rec = self.records[r.req_id]
+            if rec.t_arrive_s < 0:
+                rec.t_arrive_s = self.model_time_s
+        free = [i for i, s in enumerate(self.active) if s is None]
+        while free and self.pending and self.pending[0].arrival <= self.clock:
+            req = self.pending[0]
+            rec = self.records[req.req_id]
+            if (self.kv_capacity_bytes is not None
+                    and any(s is not None for s in self.active)
+                    and self.kv_committed_bytes + rec.kv_projected_bytes
+                    > self.kv_capacity_bytes):
+                break                    # strict FIFO: wait for retirements
+            self.pending.pop(0)
+            self.kv_committed_bytes += rec.kv_projected_bytes
+            self.active[free.pop(0)] = self._start(req, rec)
+
+    def _start(self, req: ServeRequest, rec: RequestRecord) -> _ActiveSeq:
+        eng = ServeEngine(
+            self.cfg, self.params, max_seq=self._max_seq, batch=self.batch,
+            page_tokens=self.page_tokens, hbm_kv_budget=self.hbm_kv_budget,
+            device_kind=self.device, policy=self.policy,
+            key_prefix=f"r{req.req_id}.", async_io=self.async_io,
+        )
+        rec.admit_step = self.clock
+        rec.t_admit_s = self.model_time_s
+        rec.prefill_tokens = int(req.prompt.size)
+        logits = eng.prefill(req.prompt)
+        return _ActiveSeq(req, rec, eng,
+                          np.random.default_rng(req.seed), logits)
+
+    def _decode_round(self):
+        for seq in self.active:
+            if seq is None:
+                continue
+            nxt = _sample_next(seq.logits, seq.rng, seq.req.greedy)
+            seq.out.append(nxt)
+            if len(seq.out) < seq.req.max_new_tokens:
+                seq.logits = seq.engine.decode(nxt.reshape(-1, 1))
+            else:
+                seq.done = True
+
+    def _advance_time(self):
+        dram, link = self._io_snapshot()
+        io_s = max((dram - self._io_mark[0]) / self.sys.cxl_ddr_bw,
+                   (link - self._io_mark[1]) / self.sys.cxl_link_bw)
+        self._io_mark = (dram, link)
+        self.model_time_s += max(1.0 / self.sys.cap_tok_s, io_s)
+
+    def _retire(self):
+        """Record + free finished sequences (their engines were already
+        torn down in :meth:`step`, before the tick's time advance)."""
+        for i, seq in enumerate(self.active):
+            if seq is None or not seq.done:
+                continue
+            rec = seq.record
+            rec.tokens = np.stack(seq.out, axis=1)
+            rec.finish_step = self.clock
+            rec.t_finish_s = self.model_time_s
+            self.kv_committed_bytes -= rec.kv_projected_bytes
+            self.active[i] = None
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.active)
+
+    def device_stats(self):
+        return self.device.stats

@@ -1,0 +1,238 @@
+"""Continuous-batching scheduler: dynamic join/leave over one shared
+device, KV-capacity-aware admission, retirement teardown, and the
+differential guarantee (per-request tokens bit-identical to solo runs)."""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.tier import KV, ReadReq, WriteReq, make_device
+from repro.runtime import (
+    ServeEngine, ServeRequest, ServeScheduler, projected_kv_bytes,
+)
+from repro.runtime.paging import LOSSLESS_POLICY
+
+
+# ---------------------------------------------------------------------------
+# fast (no model): arrival traces + tier namespace teardown
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_shape_and_rate():
+    t = synth.poisson_arrivals(2000, rate=0.5, seed=1)
+    assert t.shape == (2000,) and np.all(np.diff(t) >= 0)
+    # mean inter-arrival ~ 1/rate
+    assert abs(np.diff(t).mean() - 2.0) < 0.2
+    with pytest.raises(ValueError):
+        synth.poisson_arrivals(4, rate=0.0)
+
+
+def test_bursty_arrivals_clump_and_match_rate():
+    t = synth.bursty_arrivals(2000, rate=0.5, burst=4, seed=2)
+    assert t.shape == (2000,) and np.all(np.diff(t) >= 0)
+    # members of a burst share an arrival time: 3 of every 4 gaps are zero
+    assert (np.diff(t) == 0).mean() > 0.6
+    # mean offered load still ~ rate
+    assert abs(t[-1] / 2000 - 2.0) < 0.3
+
+
+def test_request_trace_fields():
+    tr = synth.request_trace(6, vocab=128, rate=1.0, kind="bursty",
+                             prompt_len=16, new_tokens=4, seed=3)
+    assert len(tr) == 6
+    for r in tr:
+        assert r["prompt"].shape == (1, 16)
+        assert r["prompt"].dtype == np.int32
+        assert 0 <= r["prompt"].min() and r["prompt"].max() < 128
+        assert r["max_new_tokens"] == 4
+    assert [r["arrival"] for r in tr] == sorted(r["arrival"] for r in tr)
+    with pytest.raises(ValueError):
+        synth.request_trace(2, 128, kind="uniform")
+
+
+def test_delete_prefix_frees_namespace_only():
+    dev = make_device("trace", kv_window=16)
+    dev.submit([
+        WriteReq(f"r0.p{i}", synth.kv_cache(16, 64, seed=i), kind=KV)
+        for i in range(3)
+    ] + [WriteReq("r1.p0", synth.kv_cache(16, 64, seed=9), kind=KV)])
+    survivor = dev.submit([ReadReq("r1.p0", kind=KV)])[0].data
+    assert dev.delete_prefix("r0.") == 3
+    # r0 namespace gone: keys, staging, index entries
+    for i in range(3):
+        with pytest.raises(KeyError):
+            dev.submit([ReadReq(f"r0.p{i}", kind=KV)])
+        assert dev.n_blocks(f"r0.p{i}") == 0
+    assert not any(k[0].startswith("r0.") for k in dev._index._lru)
+    # survivor is untouched, stored capacity now equals its footprint
+    np.testing.assert_array_equal(
+        dev.submit([ReadReq("r1.p0", kind=KV)])[0].data, survivor)
+    assert dev.stats.dram_bytes_stored == dev.footprint("r1.p0")
+    assert dev.delete_prefix("r1.") == 1
+    assert dev.stats.dram_bytes_stored == 0 and dev.stats.blocks == 0
+
+
+def test_delete_prefix_flushes_queued_reads_first():
+    dev = make_device("trace", kv_window=16, window=64)
+    dev.submit([WriteReq("r0.p", synth.kv_cache(16, 64, seed=0), kind=KV),
+                WriteReq("r1.p", synth.kv_cache(16, 64, seed=1), kind=KV)])
+    ticket = dev.submit_async([ReadReq("r1.p", kind=KV)])[0]
+    assert not ticket.done
+    dev.delete_prefix("r0.")          # must not orphan r1's queued read
+    assert ticket.done
+    assert ticket.wait().data is not None
+
+
+# ---------------------------------------------------------------------------
+# model-backed scheduler behavior
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_pair(smoke_model):
+    return smoke_model("qwen2-0.5b")
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("device_kind", "trace")
+    kw.setdefault("policy", LOSSLESS_POLICY)
+    kw.setdefault("page_tokens", 16)
+    kw.setdefault("hbm_kv_budget", 1 << 12)
+    return ServeScheduler(cfg, params, **kw)
+
+
+def _reqs(cfg, n, arrivals, prompt_len=32, new=5):
+    rng = np.random.default_rng(11)
+    return [
+        ServeRequest(
+            req_id=i, arrival=float(arrivals[i]),
+            prompt=rng.integers(0, cfg.vocab, (1, prompt_len)).astype(
+                np.int32),
+            max_new_tokens=new, seed=100 + i,
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.mark.slow
+def test_continuous_batching_differential(engine_pair):
+    """The acceptance invariant: dynamic join/leave + capacity-limited
+    admission must not change one token vs solo runs of the same
+    requests (same seed, same max_seq)."""
+    cfg, params = engine_pair
+    proj = projected_kv_bytes(cfg, 1, 32 + 5, 16)
+    sched = _sched(cfg, params, max_batch=2,
+                   kv_capacity_bytes=2 * proj)   # both slots usable, barely
+    reqs = _reqs(cfg, 5, arrivals=[0.0, 0.5, 1.0, 6.0, 6.0])
+    rep = sched.run(reqs)
+    assert len(rep.records) == 5
+    # dynamic membership actually happened: some request waited
+    assert any(r.admit_step > int(np.ceil(r.arrival)) for r in rep.records)
+    for req, rec in zip(reqs, rep.records):
+        solo = ServeEngine(
+            cfg, params, max_seq=sched._max_seq, batch=1, page_tokens=16,
+            hbm_kv_budget=1 << 12, device_kind="trace",
+            policy=LOSSLESS_POLICY,
+        ).generate(req.prompt, req.max_new_tokens, seed=req.seed)
+        np.testing.assert_array_equal(solo, rec.tokens)
+
+
+@pytest.mark.slow
+def test_admission_blocked_by_kv_capacity(engine_pair):
+    """Capacity for ~1 request: admission must serialize even though a
+    second batch slot is free the whole time."""
+    cfg, params = engine_pair
+    proj = projected_kv_bytes(cfg, 1, 32 + 5, 16)
+    assert proj > 0
+    sched = _sched(cfg, params, max_batch=2,
+                   kv_capacity_bytes=int(1.5 * proj))
+    reqs = _reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0])
+    max_active = 0
+    sched.submit(reqs)
+    while sched.step():
+        max_active = max(max_active, sched.n_active)
+        assert sched.kv_committed_bytes <= int(1.5 * proj)
+    assert max_active == 1
+    rep = sched.report()
+    # each admission waited for the previous retirement
+    admits = [r.admit_step for r in rep.records]
+    finishes = [r.finish_step for r in rep.records]
+    assert admits[1] > finishes[0] and admits[2] > finishes[1]
+    assert rep.records[1].queue_delay_s > 0
+
+
+@pytest.mark.slow
+def test_oversized_request_admits_into_empty_batch(engine_pair):
+    """A request larger than the whole capacity must still run (alone)
+    rather than deadlock the FIFO."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params, kv_capacity_bytes=1)   # < any projection
+    rep = sched.run(_reqs(cfg, 2, arrivals=[0.0, 0.0]))
+    assert len(rep.records) == 2
+    assert rep.records[1].admit_step > rep.records[0].finish_step
+
+
+@pytest.mark.slow
+def test_retirement_frees_pages_and_tier_keys(engine_pair):
+    """No key leaks: after the run the shared device holds zero blocks,
+    zero stored bytes, no staging, no index entries, and the scheduler's
+    committed-capacity counter is back to zero."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params)
+    sched.run(_reqs(cfg, 3, arrivals=[0.0, 0.0, 1.0]))
+    d = sched.device_stats()
+    assert d.dram_bytes_stored == 0
+    assert d.raw_bytes_stored == 0
+    assert d.blocks == 0
+    dev = sched.device
+    assert not dev._tensors and not dev._kv_staging and not dev._kv_channels
+    assert not dev._index._lru
+    assert sched.kv_committed_bytes == 0
+    assert all(s is None for s in sched.active) and not sched.pending
+
+
+@pytest.mark.slow
+def test_empty_batch_idle_steps(engine_pair):
+    """A late-arriving trace forces idle ticks: the clock and modeled
+    time advance with zero active sequences, then the request runs."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params)
+    sched.submit(_reqs(cfg, 1, arrivals=[4.7]))
+    for _ in range(4):          # steps 0..3: nothing has arrived
+        assert sched.step()
+        assert sched.n_active == 0
+    t_idle = sched.model_time_s
+    assert sched.clock == 4 and t_idle > 0
+    while sched.step():
+        pass
+    rep = sched.report()
+    assert rep.records[0].admit_step == 5   # first tick with clock >= 4.7
+    assert rep.records[0].queue_delay_s == 0.0
+    assert rep.model_time_s > t_idle
+
+
+@pytest.mark.slow
+def test_single_request_degenerate(engine_pair):
+    """One request == a solo engine run, and the report is coherent."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params, max_batch=4)
+    req = _reqs(cfg, 1, arrivals=[0.0], new=6)[0]
+    rep = sched.run([req])
+    solo = ServeEngine(
+        cfg, params, max_seq=sched._max_seq, batch=1, page_tokens=16,
+        hbm_kv_budget=1 << 12, device_kind="trace", policy=LOSSLESS_POLICY,
+    ).generate(req.prompt, req.max_new_tokens, seed=req.seed)
+    np.testing.assert_array_equal(solo, rep.records[0].tokens)
+    assert rep.decode_tokens == 6
+    assert rep.p50_latency_s == rep.p99_latency_s == rep.records[0].latency_s
+    assert rep.mean_queue_delay_s == 0.0
+    assert rep.tok_s > 0 and rep.model_time_s > 0
+
+
+def test_scheduler_report_empty():
+    """Report before any work: no records, no NaN crashes."""
+    from repro.runtime.serving import SchedulerReport
+
+    rep = SchedulerReport(records=[], steps=0, model_time_s=0.0,
+                          decode_tokens=0, prefill_tokens=0)
+    assert rep.tok_s == 0.0
+    assert np.isnan(rep.p50_latency_s) and np.isnan(rep.mean_queue_delay_s)
