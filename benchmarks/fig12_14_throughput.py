@@ -6,10 +6,15 @@ anchor points, then reproduces the three experiments:
   Fig. 13: GPT-OSS-120B BF16, alpha=0.8, weights also spill.
   Fig. 14: alpha sweep (unimodal; TRACE peak higher and at larger alpha).
 
-Plus two measured (receipt-driven) sections: async-vs-sync multi-stream
-tok/s on the device model, and a continuous-batching offered-load sweep
-(ServeScheduler): tok/s + p50/p99 request latency at several Poisson
-arrival rates.
+Plus three measured (receipt-driven) sections: async-vs-sync
+multi-stream tok/s on the device model, a continuous-batching
+offered-load sweep (ServeScheduler: tok/s + p50/p99 request latency at
+several Poisson arrival rates), and a capacity-model sweep — at a fixed
+``kv_capacity_bytes`` on the trace device, ratio-aware (`physical`)
+admission against the residency ledger must admit a strictly larger
+concurrent batch, and deliver more tok/s, than the `logical` BF16
+projection.  ``--smoke`` runs just that sweep as the CI
+admission-regression gate.
 """
 
 from __future__ import annotations
@@ -145,11 +150,96 @@ def _continuous_batching_sweep():
             "retired requests must free their tier namespaces"
 
 
+def _capacity_model_sweep(smoke: bool = False):
+    """Physical vs logical admission at fixed KV capacity (trace device).
+
+    Capacity is sized to 1.7x one request's logical projection: the
+    logical model can never overlap two requests (2x > 1.7x), while the
+    physical model admits a second as soon as the ledger-observed
+    compression ratio clears 2/1.7 ≈ 1.18 — comfortably below what the
+    trace layout achieves on model KV.  The run asserts the
+    admitted-batch and tok/s wins, making it the admission-regression
+    gate CI runs via ``--smoke``.  Tokens stay bit-identical to solo
+    runs: the degrade ladder is disabled, admission only changes
+    membership (the scheduler differential tests prove that invariant).
+    """
+    import jax
+
+    from repro.configs import ARCHS, smoke_config
+    from repro.models.model import init_params
+    from repro.runtime import ServeScheduler, projected_kv_bytes
+    from repro.runtime.paging import DEFAULT_DEGRADE_LADDER, LOSSLESS_POLICY
+
+    cfg = smoke_config(ARCHS["qwen2-0.5b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_req, new_tok, prompt_len = (3, 4, 32) if smoke else (5, 6, 32)
+    proj = projected_kv_bytes(cfg, 1, prompt_len + new_tok, 16)
+    cap = int(1.7 * proj)
+
+    def _requests():
+        rng = np.random.default_rng(23)
+        return [
+            dict(arrival=0.0,
+                 prompt=rng.integers(0, cfg.vocab, (1, prompt_len)).astype(
+                     np.int32),
+                 max_new_tokens=new_tok, seed=500 + i)
+            for i in range(n_req)
+        ]
+
+    results = {}
+    for model in ("logical", "physical"):
+        sched = ServeScheduler(
+            cfg, params, max_batch=3, device_kind="trace",
+            policy=LOSSLESS_POLICY, page_tokens=16, hbm_kv_budget=1 << 12,
+            kv_capacity_bytes=cap, capacity_model=model,
+        )
+        rep = sched.run(_requests())
+        results[model] = rep
+        emit("fig12", f"cap_{model}_peak_batch", rep.peak_active, "req",
+             f"{n_req} reqs at kv_capacity 1.7x one projection")
+        emit("fig12", f"cap_{model}_tok_s", rep.tok_s, "tok/s",
+             f"ratio estimate {rep.kv_ratio_estimate:.2f}x")
+        emit("fig12", f"cap_{model}_p50_ttft", rep.p50_ttft_s * 1e3, "ms",
+             f"TPOT {rep.mean_tpot_s * 1e3:.2f} ms/tok")
+        d = sched.device_stats()
+        assert d.dram_bytes_stored == 0 and d.blocks == 0, \
+            "retired requests must free their tier namespaces"
+        assert sched.device.resident_bytes() == 0, \
+            "residency ledger must drain with the device"
+    log_rep, phy_rep = results["logical"], results["physical"]
+    # The admission-regression gate: ratio-aware admission must beat the
+    # logical projection on a compressing device — in admitted batch
+    # (strictly) and throughput.
+    assert phy_rep.peak_active > log_rep.peak_active, \
+        (phy_rep.peak_active, log_rep.peak_active)
+    assert phy_rep.tok_s > log_rep.tok_s, (phy_rep.tok_s, log_rep.tok_s)
+    emit("fig12", "cap_physical_admission_gain",
+         phy_rep.peak_active / log_rep.peak_active, "x",
+         "physical admits a strictly larger concurrent batch")
+    emit("fig12", "cap_physical_tok_s_gain", phy_rep.tok_s / log_rep.tok_s,
+         "x", "at identical kv_capacity_bytes on the trace device")
+
+    # Precision-elastic reclamation: same capacity, degrade ladder on —
+    # blocked admissions shed cold mantissa planes instead of stalling.
+    sched = ServeScheduler(
+        cfg, params, max_batch=3, device_kind="trace",
+        policy=LOSSLESS_POLICY, page_tokens=16, hbm_kv_budget=1 << 12,
+        kv_capacity_bytes=int(1.5 * proj), capacity_model="physical",
+        degrade_ladder=DEFAULT_DEGRADE_LADDER,
+    )
+    rep = sched.run(_requests())
+    emit("fig12", "cap_ladder_peak_batch", rep.peak_active, "req",
+         "1.5x capacity + man4→man2→man0 reclamation")
+    emit("fig12", "cap_ladder_reclaimed", rep.reclaimed_bytes, "B",
+         "physical bytes shed in place by truncate_planes")
+
+
 def run():
     sys = SystemSpec()
     _measured_step_traffic(sys)
     _async_multistream_throughput(sys)
     _continuous_batching_sweep()
+    _capacity_model_sweep()
 
     # ---- Fig. 12 -------------------------------------------------------------
     m = gpt_oss_120b("mxfp4")
@@ -196,4 +286,14 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the capacity-model sweep (CI "
+                         "admission-regression gate: physical must admit "
+                         "a larger batch than logical on trace)")
+    if ap.parse_args().smoke:
+        _capacity_model_sweep(smoke=True)
+    else:
+        run()

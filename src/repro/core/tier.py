@@ -94,6 +94,33 @@ cross-boundary contention); a wait (sync read, ``drain``,
 :meth:`TierStore.quiesce` idles the host until the pipes drain.  The
 clock only shapes ``queue_delay_s``/``latency_s`` — byte accounting, and
 therefore the receipts-sum == ``DeviceStats`` invariant, is untouched.
+
+Residency ledger (the physical-capacity control signal):
+
+The store keeps a live per-key ledger of *stored* bytes — compressed
+payload planes plus the 64 B/block index entry — updated at every block
+commit (``_encode_commit`` → :meth:`TierStore._commit`), decremented by
+:meth:`TierStore.delete` / :meth:`TierStore.delete_prefix` and by
+in-place plane truncation.  :meth:`TierStore.resident_bytes` sums any
+key-prefix namespace (a request's ``r{id}.`` keys, or the whole device
+with an empty prefix) and :meth:`TierStore.compression_ratio` reports
+the namespace's logical/physical ratio.  The invariant — the ledger
+equals the sum of stored payload+index bytes at all times, under any
+interleaving of writes, deletes and truncations — is property-tested.
+This is what lets admission control reason about the *physical* KV
+footprint instead of the logical projection (a trace device stores KV
+at >2x compression, so it can admit a correspondingly larger batch).
+
+Precision-elastic reclamation: plane-aligned layouts additionally
+support :meth:`TierStore.truncate_planes` — dropping the low-order
+mantissa planes of already-stored blocks *in place* (paper §III-C: the
+bit-plane substrate makes precision a storage knob, not just a fetch
+knob).  Truncation reclaims the dropped planes' payload bytes (returned
+to the caller and reconciled against the ledger), records the surviving
+:class:`PrecisionView` on each block, and later reads are served at the
+intersection of the requested and stored views — bit-identical to
+``reconstruct_u16`` applied at that view.  Word layouts store opaque
+compressed containers and report truncation unsupported.
 """
 
 from __future__ import annotations
@@ -205,11 +232,31 @@ class Receipt:
 
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
-    """First-order service-time model for a receipt (paper §IV-B numbers)."""
+    """First-order service-time model for a receipt (paper §IV-B numbers).
+
+    ``base_s`` is the fixed per-request overhead.  The named device
+    configurations derive it from the calibrated controller pipeline via
+    :meth:`for_design` (Table V load-to-use: Plain 71 / GComp 84 / TRACE
+    89 cycles @ 2 GHz), so receipt latency reflects the per-design
+    front-end + metadata + scheduling + DRAM-window cost; passing an
+    explicit ``base_s`` (or a whole ``link_model``) overrides the anchor
+    with a constant — which is what latency-shape tests do.
+    """
 
     ddr_bw: float = 256e9         # device-side DDR
     link_bw: float = 512e9        # CXL.mem per direction
     base_s: float = 1e-6          # fixed request overhead
+
+    @classmethod
+    def for_design(cls, design: str, comp_ratio: float = 1.5,
+                   **kw) -> "LinkModel":
+        """A link model whose fixed overhead is the calibrated
+        load-to-use pipeline latency of ``design`` (controller.py
+        anchors, Fig. 22/23) at the given compression ratio."""
+        from .controller import load_to_use_ns
+
+        return cls(base_s=load_to_use_ns(design, comp_ratio=comp_ratio)
+                   * 1e-9, **kw)
 
     def latency(self, dram_bytes: int, link_bytes: int) -> float:
         return self.base_s + max(dram_bytes / self.ddr_bw,
@@ -306,10 +353,25 @@ class _Block:
     valid_elems: int                 # host-visible elements
     padded_elems: int                # elements the payloads encode (≥ valid)
     kv_meta: Optional[KVBlockMeta] = None
+    view: Optional[PrecisionView] = None   # surviving view after truncation
 
     @property
     def stored_bytes(self) -> int:
         return sum(len(p) for p in self.payloads)
+
+
+@dataclasses.dataclass
+class ResidencyEntry:
+    """One key's row in the physical-footprint residency ledger."""
+
+    payload_bytes: int = 0      # stored (post-compression) plane payloads
+    index_bytes: int = 0        # 64 B per committed block (metadata)
+    raw_bytes: int = 0          # logical (uncompressed) footprint
+    blocks: int = 0
+
+    @property
+    def physical_bytes(self) -> int:
+        return self.payload_bytes + self.index_bytes
 
 
 class _EncodeSlab:
@@ -643,6 +705,27 @@ class BitplaneLayout(Layout):
         return [r.reshape(s.shape) for r, s in zip(_split_like(flat, segs), segs)]
 
 
+def _intersect_views(a: PrecisionView, b: PrecisionView) -> PrecisionView:
+    """The widest view whose fetched planes are a subset of both ``a``'s
+    and ``b``'s.  Kept planes are the narrower cut; guard planes are
+    whatever of the narrower fetch frontier remains beyond it.  This is
+    how a read against a truncated block is served: the host gets
+    exactly the planes that still physically exist, reconstructed with
+    the same guard-rounding rule as a plane-aligned fetch at that view.
+    """
+    if a == b:
+        return a
+    r_e = min(a.r_e, b.r_e)
+    d_e = min(a.r_e + a.d_e, b.r_e + b.d_e) - r_e
+    r_m = min(a.r_m, b.r_m)
+    d_m = min(a.r_m + a.d_m, b.r_m + b.d_m) - r_m
+    for v in (a, b):
+        if (v.r_e, v.d_e, v.r_m, v.d_m) == (r_e, d_e, r_m, d_m):
+            return v
+    return PrecisionView(r_e=r_e, r_m=r_m, d_e=d_e, d_m=d_m,
+                         name=f"cut{1 + r_e + r_m}")
+
+
 def _split_like(flat: np.ndarray, segs: Sequence[np.ndarray]) -> List[np.ndarray]:
     out, off = [], 0
     for s in segs:
@@ -733,6 +816,9 @@ class TierStore:
         self.window = window                 # max queued (in-flight) reads
         self.batched_encode = batched_encode  # False: scalar reference path
         self.stats = DeviceStats()
+        # Physical-footprint residency ledger: one entry per stored key,
+        # equal to that key's stored payload+index bytes at all times.
+        self._ledger: Dict[str, ResidencyEntry] = {}
         self._tensors: Dict[str, List[_Block]] = {}
         self._shapes: Dict[str, tuple] = {}
         self._kv_staging: Dict[str, list] = {}   # stream → [token rows]
@@ -1091,6 +1177,11 @@ class TierStore:
 
     def _commit(self, rec: Receipt, key: str, block: _Block):
         self._tensors.setdefault(key, []).append(block)
+        entry = self._ledger.setdefault(key, ResidencyEntry())
+        entry.payload_bytes += block.stored_bytes
+        entry.index_bytes += INDEX_ENTRY_BYTES
+        entry.raw_bytes += block.valid_elems * 2
+        entry.blocks += 1
         rec.blocks += 1
         rec.dram_bytes_stored += block.stored_bytes
         rec.dram_bytes_written += block.stored_bytes
@@ -1124,6 +1215,7 @@ class TierStore:
     def _gather_and_decode(self, reqs: Sequence[ReadReq],
                            recs: List[Receipt]) -> List[Receipt]:
         req_blocks: List[List[_Block]] = []
+        req_views: List[List[PrecisionView]] = []
         for req, rec in zip(reqs, recs):
             if req.kind == KV and self._kv_staging.get(req.key):
                 # implicit flush, accounted to this request
@@ -1132,32 +1224,48 @@ class TierStore:
             if req.block_range is not None:
                 lo, hi = req.block_range
                 blocks = blocks[lo:hi]
-            for off, b in enumerate(blocks):
+            # A truncated block clamps the request's view to the planes
+            # that still exist (per block — blocks committed after the
+            # truncation are full again).
+            views = [req.view if b.view is None
+                     else _intersect_views(req.view, b.view)
+                     for b in blocks]
+            for off, (b, view) in enumerate(zip(blocks, views)):
                 base = (req.block_range[0] if req.block_range else 0) + off
                 self._touch_index(rec, req.key, base)
-                for p in self.layout.fetched_payloads(b, req.view):
+                for p in self.layout.fetched_payloads(b, view):
                     rec.dram_bytes_read += len(b.payloads[p])
             req_blocks.append(list(blocks))
+            req_views.append(views)
 
-        # Group all blocks across requests by view (the view fixes both the
-        # fetched plane set and the reconstruction), decode each group once.
+        # Group all blocks across requests by effective view (the view
+        # fixes both the fetched plane set and the reconstruction),
+        # decode each group once.
         groups: Dict[PrecisionView, List[_Block]] = {}
-        for req, blocks in zip(reqs, req_blocks):
-            groups.setdefault(req.view, []).extend(blocks)
+        for views, blocks in zip(req_views, req_blocks):
+            for view, b in zip(views, blocks):
+                groups.setdefault(view, []).append(b)
         decoded = {
-            view: self.layout.decode_batch(blocks, view, self.codec)
+            view: iter(self.layout.decode_batch(blocks, view, self.codec))
             for view, blocks in groups.items()
         }
 
         out: List[Receipt] = []
-        for req, rec, blocks in zip(reqs, recs, req_blocks):
-            pool = decoded[req.view]
-            segs, decoded[req.view] = pool[: len(blocks)], pool[len(blocks):]
+        for req, rec, blocks, views in zip(reqs, recs, req_blocks,
+                                           req_views):
+            # per-group iterators advance in encounter order, which is
+            # exactly the order the group lists were built in
+            segs = [next(decoded[view]) for view in views]
             rec.data = self._assemble(req, segs)
             # Word devices always move full 16-bit containers over the link
-            # (paper Issue 2); plane-aligned layouts return the view's bits.
-            bits = req.view.bits if self.layout.plane_aligned else BF16_BITS
-            rec.link_bytes_out += rec.data.size * bits // 8
+            # (paper Issue 2); plane-aligned layouts return the view's bits
+            # (the effective, possibly truncation-clamped view per block).
+            if self.layout.plane_aligned:
+                rec.link_bytes_out += sum(
+                    seg.size * view.bits for seg, view in zip(segs, views)
+                ) // 8
+            else:
+                rec.link_bytes_out += rec.data.size * BF16_BITS // 8
             rec.service_s = rec.latency_s = self.link_model.latency(
                 rec.dram_bytes_read, rec.link_bytes_out
             )
@@ -1199,6 +1307,83 @@ class TierStore:
     def logical_bytes(self, key: str) -> int:
         return sum(b.valid_elems for b in self._tensors[key]) * 2
 
+    # -- residency ledger -----------------------------------------------------
+    def resident_bytes(self, prefix: str = "") -> int:
+        """Physical bytes this namespace occupies in device DRAM right
+        now: stored payload planes plus the 64 B/block index entries.
+        An empty prefix sums the whole device.  Equal to the sum of
+        stored payload+index bytes at all times (the ledger invariant),
+        which makes it the admission-control counterpart of the logical
+        :meth:`logical_bytes` projection."""
+        if not prefix:
+            return sum(e.physical_bytes for e in self._ledger.values())
+        return sum(e.physical_bytes for k, e in self._ledger.items()
+                   if k.startswith(prefix))
+
+    def compression_ratio(self, prefix: str = "") -> float:
+        """Observed logical/physical ratio of one namespace (1.0 when it
+        holds nothing) — the feedback signal the ratio-aware admission
+        estimator corrects against at every commit boundary."""
+        raw = phys = 0
+        for k, e in self._ledger.items():
+            if not prefix or k.startswith(prefix):
+                raw += e.raw_bytes
+                phys += e.physical_bytes
+        return raw / phys if phys > 0 else 1.0
+
+    def truncate_planes(self, keys: Sequence[str],
+                        view: PrecisionView) -> int:
+        """Drop stored planes outside ``view``'s fetched set *in place*,
+        reclaiming their payload bytes (paper §III-C: precision scaling
+        as a storage knob).
+
+        Each surviving block records the intersection of its previous
+        view with ``view``; later reads are served at the intersection
+        of the requested and stored views (bit-identical to
+        ``reconstruct_u16`` at that view), and their DRAM traffic only
+        touches surviving planes.  Staged (uncommitted) KV windows are
+        unaffected — blocks committed after a truncation store full
+        precision again.  Returns the reclaimed bytes, which reconcile
+        exactly with the ledger delta.  Only plane-aligned layouts can
+        shed planes of an already-stored block; word layouts store
+        opaque compressed containers and raise ``NotImplementedError``.
+        Unknown keys are ignored (a cold page may already be deleted).
+        """
+        if not self.layout.plane_aligned:
+            raise NotImplementedError(
+                f"layout {self.layout.name!r} stores word-major "
+                "containers; in-place plane truncation needs a "
+                "plane-aligned layout"
+            )
+        # In-flight reads were issued against the current plane mapping;
+        # complete them before planes disappear (program order).
+        if self._queue:
+            self._flush_queue(len(self._queue), wait=True)
+        keep = set(view.fetched_planes())
+        reclaimed = 0
+        for key in keys:
+            blocks = self._tensors.get(key)
+            if not blocks:
+                continue
+            freed = 0
+            for b in blocks:
+                if b.kv_meta is not None and view.r_e != EXP_BITS:
+                    raise ValueError(
+                        "KV views must keep the full (delta) exponent"
+                    )
+                for p in range(len(b.payloads)):
+                    if p not in keep and b.payloads[p]:
+                        freed += len(b.payloads[p])
+                        b.payloads[p] = b""
+                        b.flags[p] = codecs.RAW
+                b.view = (view if b.view is None
+                          else _intersect_views(b.view, view))
+            if freed:
+                self._ledger[key].payload_bytes -= freed
+                self.stats.dram_bytes_stored -= freed
+                reclaimed += freed
+        return reclaimed
+
     def delete(self, key: str):
         # In-flight reads were issued against the key's current mapping;
         # complete them before the mapping disappears.
@@ -1215,6 +1400,7 @@ class TierStore:
             self.stats.dram_bytes_stored -= b.stored_bytes
             self.stats.raw_bytes_stored -= b.valid_elems * 2
             self.stats.blocks -= 1
+        self._ledger.pop(key, None)
         self._shapes.pop(key, None)
         self._kv_staging.pop(key, None)
         self._kv_channels.pop(key, None)
@@ -1276,11 +1462,18 @@ class TierStore:
 # ---------------------------------------------------------------------------
 
 class PlainDevice(TierStore):
-    """CXL-Plain: word-major, no compression, full-container fetch."""
+    """CXL-Plain: word-major, no compression, full-container fetch.
+
+    The named designs default their ``link_model`` overhead to the
+    calibrated controller pipeline (``LinkModel.for_design`` — Table V's
+    71/84/89-cycle load-to-use anchors); pass ``link_model`` explicitly
+    to override with a constant.
+    """
 
     name = "plain"
 
     def __init__(self, codec: str = "lz4", **kw):
+        kw.setdefault("link_model", LinkModel.for_design("plain"))
         super().__init__(layout=WordLayout(compress=False), codec=codec, **kw)
 
 
@@ -1290,6 +1483,7 @@ class GCompDevice(TierStore):
     name = "gcomp"
 
     def __init__(self, codec: str = "lz4", **kw):
+        kw.setdefault("link_model", LinkModel.for_design("gcomp"))
         super().__init__(layout=WordLayout(compress=True), codec=codec, **kw)
 
 
@@ -1299,6 +1493,7 @@ class TraceDevice(TierStore):
     name = "trace"
 
     def __init__(self, codec: str = "lz4", **kw):
+        kw.setdefault("link_model", LinkModel.for_design("trace"))
         super().__init__(layout=BitplaneLayout(kv_transform=True),
                          codec=codec, **kw)
 

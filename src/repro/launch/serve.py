@@ -25,11 +25,33 @@ import numpy as np
 
 from ..configs import ARCHS, smoke_config
 from ..core import synth
+from ..core.precision import VIEWS
 from ..models.model import init_params
 from ..runtime import (
     MultiStreamEngine, PAPER_POLICY, ServeEngine, ServeScheduler,
 )
-from ..runtime.paging import LOSSLESS_POLICY
+from ..runtime.paging import DEFAULT_DEGRADE_LADDER, LOSSLESS_POLICY
+
+
+def parse_degrade_ladder(spec: str):
+    """CLI ladder spec → tuple of PrecisionViews.
+
+    ``"none"``/empty disables reclamation, ``"default"`` is the paper's
+    man4→man2→man0 progression, otherwise a comma-separated list of view
+    names from ``repro.core.precision.VIEWS`` (e.g. ``man4,man0``).
+    """
+    spec = (spec or "none").strip().lower()
+    if spec in ("none", ""):
+        return ()
+    if spec == "default":
+        return DEFAULT_DEGRADE_LADDER
+    try:
+        return tuple(VIEWS[name.strip()] for name in spec.split(","))
+    except KeyError as e:
+        raise SystemExit(
+            f"unknown precision view {e.args[0]!r} in --degrade-ladder "
+            f"(known: {', '.join(sorted(VIEWS))})"
+        )
 
 EPILOG = """\
 serving modes (and the benchmark figure each corresponds to):
@@ -54,8 +76,15 @@ serving modes (and the benchmark figure each corresponds to):
                          [--max-batch M]           FIFO + KV-capacity-aware
                          [--arrival-kind K]        admission, retire frees
                          [--kv-capacity B]         pages — fig12_14's
-                                                   throughput + p50/p99
-                                                   latency vs offered load
+                         [--capacity-model M]      throughput + p50/p99
+                         [--degrade-ladder L]      latency vs offered load
+
+  The physical capacity model admits against the device's residency
+  ledger (projection / observed compression ratio) instead of logical
+  BF16 bytes — trace devices admit a larger concurrent batch at the
+  same --kv-capacity; a degrade ladder (e.g. "man4,man2,man0") lets a
+  blocked admission reclaim stored bytes by shedding mantissa planes of
+  cold pages in place before stalling — fig12_14's capacity sweep.
 
 All modes keep per-sequence outputs bit-identical to a solo run of the
 same request; see docs/ARCHITECTURE.md for the dataflow.
@@ -139,6 +168,8 @@ def serve_continuous(
     hbm_kv_budget: int = 1 << 12,
     page_tokens: int = 16,
     kv_capacity_bytes: int | None = None,
+    capacity_model: str = "logical",
+    degrade_ladder=(),
     lossless_only: bool = False,
     async_io: bool = True,
     seed: int = 0,
@@ -157,18 +188,28 @@ def serve_continuous(
     sched = ServeScheduler(
         cfg, params, max_batch=max_batch, device_kind=device, policy=policy,
         batch=batch, page_tokens=page_tokens, hbm_kv_budget=hbm_kv_budget,
-        kv_capacity_bytes=kv_capacity_bytes, async_io=async_io,
+        kv_capacity_bytes=kv_capacity_bytes, capacity_model=capacity_model,
+        degrade_ladder=degrade_ladder, async_io=async_io,
     )
     rep = sched.run(trace)
     d = sched.device_stats()
     print(f"[serve] arch={arch} device={device} continuous batching: "
           f"{num_requests} requests, {arrival_kind} rate {arrival_rate}/round, "
-          f"max_batch {max_batch}")
+          f"max_batch {max_batch}, capacity model {capacity_model}")
     print(f"[serve] {rep.steps} rounds, {rep.decode_tokens} decode tokens in "
-          f"{rep.model_time_s * 1e3:.2f} modeled ms → {rep.tok_s:.1f} tok/s")
+          f"{rep.model_time_s * 1e3:.2f} modeled ms → {rep.tok_s:.1f} tok/s "
+          f"(peak admitted batch {rep.peak_active})")
     print(f"[serve] latency p50 {rep.p50_latency_s * 1e3:.2f} ms, "
           f"p99 {rep.p99_latency_s * 1e3:.2f} ms, mean queue delay "
           f"{rep.mean_queue_delay_s * 1e3:.2f} ms")
+    print(f"[serve] TTFT p50 {rep.p50_ttft_s * 1e3:.2f} ms, "
+          f"p99 {rep.p99_ttft_s * 1e3:.2f} ms; "
+          f"TPOT mean {rep.mean_tpot_s * 1e3:.2f} ms/tok")
+    if capacity_model == "physical":
+        print(f"[serve] admission ratio estimate "
+              f"{rep.kv_ratio_estimate:.2f}x"
+              + (f", reclaimed {rep.reclaimed_bytes} B via degrade ladder"
+                 if rep.reclaimed_bytes else ""))
     print(f"[serve] tier after retirement: stored {d.dram_bytes_stored} B, "
           f"{d.blocks} blocks (retired requests freed their namespaces)")
     return sched, rep
@@ -199,9 +240,26 @@ def main():
     ap.add_argument("--max-batch", type=int, default=2,
                     help="scheduler batch slots (active requests)")
     ap.add_argument("--kv-capacity", type=int, default=0,
-                    help="logical-KV admission capacity in bytes "
-                         "(0 = unlimited)")
+                    help="KV admission capacity in bytes (0 = unlimited)")
+    ap.add_argument("--capacity-model", default="logical",
+                    choices=["logical", "physical"],
+                    help="admit against logical BF16 bytes or the "
+                         "residency ledger's physical (post-compression) "
+                         "footprint")
+    ap.add_argument("--degrade-ladder", default="none",
+                    help="precision-elastic reclamation ladder: 'none', "
+                         "'default' (man4,man2,man0) or a comma list of "
+                         "view names; blocked admissions shed cold "
+                         "pages' mantissa planes in place before "
+                         "stalling (requires --capacity-model physical)")
     args = ap.parse_args()
+    ladder = parse_degrade_ladder(args.degrade_ladder)
+    if ladder and args.capacity_model != "physical":
+        raise SystemExit(
+            "--degrade-ladder requires --capacity-model physical: "
+            "reclamation frees stored bytes, which the logical "
+            "projection never looks at"
+        )
     if args.num_requests > 0:
         if args.streams > 1:
             print("[serve] note: --streams is ignored in continuous-"
@@ -212,6 +270,8 @@ def main():
             arrival_kind=args.arrival_kind, max_batch=args.max_batch,
             prompt_len=args.prompt_len, n_tokens=args.tokens,
             batch=args.batch, kv_capacity_bytes=args.kv_capacity or None,
+            capacity_model=args.capacity_model,
+            degrade_ladder=ladder,
             async_io=not args.sync_io, lossless_only=args.lossless_only,
         )
         return

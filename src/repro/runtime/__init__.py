@@ -1,11 +1,15 @@
-from .paging import KVPagePool, PagePolicy, PAPER_POLICY
+from .paging import (
+    DEFAULT_DEGRADE_LADDER, KVPagePool, LOSSLESS_POLICY, PagePolicy,
+    PAPER_POLICY,
+)
 from .serving import (
     MultiStreamEngine, RequestRecord, SchedulerReport, ServeEngine,
     ServeRequest, ServeScheduler, ServeStats, projected_kv_bytes,
 )
 from .weights import WeightStore
 
-__all__ = ["KVPagePool", "PagePolicy", "PAPER_POLICY", "MultiStreamEngine",
+__all__ = ["DEFAULT_DEGRADE_LADDER", "KVPagePool", "LOSSLESS_POLICY",
+           "PagePolicy", "PAPER_POLICY", "MultiStreamEngine",
            "RequestRecord", "SchedulerReport", "ServeEngine", "ServeRequest",
            "ServeScheduler", "ServeStats", "WeightStore",
            "projected_kv_bytes"]

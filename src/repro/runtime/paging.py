@@ -20,6 +20,18 @@ The shipped policy mirrors Table II's best row:
     cold tail   → ~FP4  (man0 view + guard round: sign+exp only)
 KV views keep the full (delta) exponent planes — they are the cheapest,
 most compressible planes — and scale mantissa planes only (precision.py).
+
+Physical-footprint accounting + precision-elastic reclamation: eviction
+and spill already move *physical* bytes (HBM pages are raw BF16; spilled
+pages occupy their post-compression footprint on the device, tracked by
+the tier's residency ledger).  ``physical_kv_bytes`` reports the pool's
+live physical footprint (HBM + device ledger), and :meth:`reclaim` frees
+device bytes *without dropping tokens*: it walks cold spilled pages —
+least-recent commit boundary first — applying the next rung of a
+configurable degradation ladder of ``PrecisionView`` s via
+``TierStore.truncate_planes`` (paper §III-C's in-place plane shedding),
+until the requested bytes are reclaimed or the ladder is exhausted.
+Word-layout devices cannot shed planes; reclaim then reports 0.
 """
 
 from __future__ import annotations
@@ -29,7 +41,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.precision import FULL, MAN0, MAN4, PrecisionView
+from ..core.precision import FULL, MAN0, MAN2, MAN4, PrecisionView
 from ..core.tier import (
     KV, ReadReq, Receipt, Ticket, TierStore, WriteReq, make_device,
 )
@@ -61,6 +73,11 @@ class PagePolicy:
 PAPER_POLICY = PagePolicy()           # Table II: 5×BF16 / 3×FP8 / 2×FP4
 LOSSLESS_POLICY = PagePolicy(tiers=((1 << 30, FULL),), tail_view=FULL)
 
+# Default precision-elastic degradation ladder: each reclaim rung sheds
+# further mantissa planes of cold stored pages in place (Table II's
+# BF16 → ~FP8 → ~FP4 progression, applied as a *storage* knob).
+DEFAULT_DEGRADE_LADDER = (MAN4, MAN2, MAN0)
+
 
 @dataclasses.dataclass
 class _Page:
@@ -71,6 +88,8 @@ class _Page:
     n_tokens: int
     importance: float = 0.0
     resident: Optional[np.ndarray] = None   # HBM copy (token-major u16) or None
+    commit_seq: int = 0       # commit boundary that admitted this page (LRU)
+    degrade_level: int = -1   # last degradation-ladder rung applied
 
 
 @dataclasses.dataclass
@@ -110,13 +129,16 @@ class KVPagePool:
         hbm_budget_bytes: int = 1 << 30,
         policy: PagePolicy = PAPER_POLICY,
         key_prefix: str = "",
+        degrade_ladder: Sequence[PrecisionView] = (),
     ):
         self.device = make_device(device) if isinstance(device, str) else device
         self.page_tokens = page_tokens
         self.hbm_budget = hbm_budget_bytes
         self.policy = policy
         self.key_prefix = key_prefix        # stream namespace on a shared device
+        self.degrade_ladder = tuple(degrade_ladder)
         self._pages: List[_Page] = []
+        self._commit_clock = 0              # commit boundaries seen (page LRU)
         self._hbm_used = 0
         self.spill_events: List[_Page] = []   # drained by the serving engine
         self.page_traffic: Dict[str, PageTraffic] = {}
@@ -160,10 +182,12 @@ class KVPagePool:
         the device encodes as a single vectorized slab (pack + codec a few
         passes for the whole group) instead of per-page pipelines.
         """
+        self._commit_clock += 1
         for layer, kind, start, tokens_u16, importance in pages:
             key = f"{self.key_prefix}L{layer}.{kind}.{start}"
             page = _Page(key, layer, kind, start, tokens_u16.shape[0],
-                         importance=importance)
+                         importance=importance,
+                         commit_seq=self._commit_clock)
             # Always admit to HBM first, then evict the least-important
             # pages (possibly this one) — importance, not arrival order,
             # decides residency (paper §II-C: importance is long-tailed).
@@ -340,6 +364,49 @@ class KVPagePool:
                for p in pages]
         return np.concatenate(out, axis=0) if out else np.empty((0, 0), np.uint16)
 
+    # -- precision-elastic reclamation -----------------------------------------
+    def reclaim(self, target_bytes: int,
+                ladder: Optional[Sequence[PrecisionView]] = None) -> int:
+        """Reclaim up to ``target_bytes`` of *physical* device bytes by
+        shedding mantissa planes of cold spilled pages in place.
+
+        Walks spilled pages coldest-first — least-recent commit boundary,
+        then least important — applying one ladder rung per pass
+        (``TierStore.truncate_planes``): every cold page degrades one
+        step before any page degrades two, so sustained pressure spreads
+        precision loss instead of destroying a single page.  A page's
+        ladder position is remembered across calls.  Shedding planes is
+        lossy and irreversible, so the ladder is strictly opt-in: the
+        pool's ``degrade_ladder`` defaults to empty and an explicit
+        ladder (e.g. ``DEFAULT_DEGRADE_LADDER``) must be configured for
+        reclaim to touch anything.  Returns the bytes actually
+        reclaimed (0 when the ladder is empty, nothing is spilled,
+        everything is already at the last rung, or the device's layout
+        cannot shed planes — word layouts).  HBM-resident pages are
+        untouched: they occupy HBM, not device capacity, and keep their
+        exact values.
+        """
+        ladder = (self.degrade_ladder if ladder is None else tuple(ladder))
+        if target_bytes <= 0 or not ladder:
+            return 0
+        cold = sorted(
+            (p for p in self._pages if p.resident is None),
+            key=lambda p: (p.commit_seq, p.importance, p.start),
+        )
+        freed = 0
+        for level, view in enumerate(ladder):
+            for page in cold:
+                if freed >= target_bytes:
+                    return freed
+                if page.degrade_level >= level:
+                    continue
+                try:
+                    freed += self.device.truncate_planes([page.key], view)
+                except NotImplementedError:
+                    return freed        # word layout: nothing to shed
+                page.degrade_level = level
+        return freed
+
     # -- teardown ---------------------------------------------------------------
     def release(self) -> int:
         """Retire this pool: free every page and tear down its namespace.
@@ -379,6 +446,20 @@ class KVPagePool:
     @property
     def hbm_bytes(self) -> int:
         return self._hbm_used
+
+    @property
+    def device_resident_bytes(self) -> int:
+        """Physical bytes this pool's namespace occupies on the device
+        right now (stored payload + index, from the residency ledger)."""
+        return self.device.resident_bytes(self.key_prefix)
+
+    @property
+    def physical_kv_bytes(self) -> int:
+        """Live physical KV footprint: raw HBM residents + the device
+        namespace's post-compression ledger bytes — the quantity a
+        physical capacity model admits against, as opposed to the
+        logical ``projected_kv_bytes`` projection."""
+        return self._hbm_used + self.device_resident_bytes
 
     @property
     def spilled_pages(self) -> int:

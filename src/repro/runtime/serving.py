@@ -416,9 +416,11 @@ class RequestRecord:
     arrival: float
     kv_projected_bytes: int = 0
     admit_step: int = -1
+    first_token_step: int = -1
     finish_step: int = -1
     t_arrive_s: float = -1.0
     t_admit_s: float = -1.0
+    t_first_token_s: float = -1.0
     t_finish_s: float = -1.0
     prefill_tokens: int = 0
     tokens: Optional[np.ndarray] = None
@@ -436,6 +438,23 @@ class RequestRecord:
     def latency_s(self) -> float:
         """Arrival → last generated token, in modeled seconds."""
         return self.t_finish_s - self.t_arrive_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival → the tick that produced the
+        first generated token (queue wait + prefill + first round)."""
+        return self.t_first_token_s - self.t_arrive_s
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token: mean inter-token gap *after* the
+        first token.  NaN for single-token requests — there is no
+        inter-token gap to measure (the explicit empty-denominator
+        value, tested)."""
+        if self.tokens is None or self.tokens.shape[1] <= 1:
+            return float("nan")
+        return ((self.t_finish_s - self.t_first_token_s)
+                / (self.tokens.shape[1] - 1))
 
 
 @functools.lru_cache(maxsize=None)
@@ -455,7 +474,8 @@ def _kv_bytes_per_token(cfg: ArchConfig, batch: int) -> int:
 
 
 def projected_kv_bytes(cfg: ArchConfig, batch: int, total_tokens: int,
-                       page_tokens: int) -> int:
+                       page_tokens: int,
+                       per_token: Optional[int] = None) -> int:
     """Logical BF16 bytes of paged KV a ``total_tokens`` sequence commits.
 
     Admission control needs the footprint BEFORE running the model, so
@@ -464,10 +484,16 @@ def projected_kv_bytes(cfg: ArchConfig, batch: int, total_tokens: int,
     paged_tokens * per_token_channels * 2`` bytes, where
     ``paged_tokens`` counts only completed page windows (partial tails
     never reach the pool).  SSM/hybrid caches have no paged KV and
-    project to zero.
+    project to zero.  ``per_token`` short-circuits the cache-spec lookup
+    with an already-known per-token increment (the scheduler's cached
+    slope) — one formula either way, so the two paths cannot drift.
     """
     paged = (total_tokens // page_tokens) * page_tokens
-    return paged * _kv_bytes_per_token(cfg, batch) if paged > 0 else 0
+    if paged <= 0:
+        return 0
+    if per_token is None:
+        per_token = _kv_bytes_per_token(cfg, batch)
+    return paged * per_token
 
 
 class _ActiveSeq:
@@ -489,13 +515,26 @@ class _ActiveSeq:
 
 @dataclasses.dataclass
 class SchedulerReport:
-    """End-of-run roll-up: per-request records + modeled aggregates."""
+    """End-of-run roll-up: per-request records + modeled aggregates.
+
+    ``peak_active`` is the largest concurrently admitted batch the run
+    reached — the quantity the capacity-model sweep compares across
+    `logical` and `physical` admission.  ``reclaimed_bytes`` totals the
+    physical bytes precision-elastic reclamation freed (0 with the
+    ladder disabled).  Every percentile/mean property returns an
+    explicit value on an empty denominator (NaN) instead of raising —
+    zero finished requests is a legal report state, tested.
+    """
 
     records: List[RequestRecord]
     steps: int
     model_time_s: float
     decode_tokens: int
     prefill_tokens: int
+    peak_active: int = 0
+    capacity_model: str = "logical"
+    kv_ratio_estimate: float = 1.0
+    reclaimed_bytes: int = 0
 
     @property
     def tok_s(self) -> float:
@@ -519,6 +558,27 @@ class SchedulerReport:
         qs = [r.queue_delay_s for r in self.records if r.finished]
         return float(np.mean(qs)) if qs else float("nan")
 
+    def ttft_percentile(self, q: float) -> float:
+        ts = [r.ttft_s for r in self.records if r.finished]
+        return float(np.percentile(ts, q)) if ts else float("nan")
+
+    @property
+    def p50_ttft_s(self) -> float:
+        return self.ttft_percentile(50)
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return self.ttft_percentile(99)
+
+    @property
+    def mean_tpot_s(self) -> float:
+        """Mean time-per-output-token across finished multi-token
+        requests (single-token requests have no inter-token gap and are
+        excluded; NaN when none qualify)."""
+        ts = [r.tpot_s for r in self.records
+              if r.finished and np.isfinite(r.tpot_s)]
+        return float(np.mean(ts)) if ts else float("nan")
+
 
 class ServeScheduler:
     """Continuous-batching request scheduler over one shared tier device.
@@ -536,11 +596,41 @@ class ServeScheduler:
     like :class:`MultiStreamEngine`.
 
     Admission is KV-capacity-aware: with ``kv_capacity_bytes`` set, a
-    request joins only when the committed logical-KV projection of every
-    active request plus its own (:func:`projected_kv_bytes`) fits; the
-    queue does NOT bypass a blocked head-of-line request (strict FIFO).
-    A request too large for the whole capacity is still admitted when the
-    batch is empty, so the queue cannot deadlock.
+    request joins only when the committed KV projection of every active
+    request plus its own fits; the queue does NOT bypass a blocked
+    head-of-line request (strict FIFO).  A request too large for the
+    whole capacity is still admitted when the batch is empty, so the
+    queue cannot deadlock.  The per-request projection is the cached
+    per-token increment (one ``jax.eval_shape`` trace per (cfg, batch))
+    times the request's completed page windows — admission checks are
+    pure arithmetic.
+
+    Two capacity models (``capacity_model``):
+
+    * `logical` — the projection is compared against capacity as raw
+      BF16 bytes (the conservative pre-ledger behavior, and the only
+      sound model for a device whose stored footprint equals its
+      logical footprint).
+    * `physical` — the projection is divided by a feedback estimate of
+      the device's compression ratio before the comparison.  The
+      estimator seeds at 1.0 (no stored data: admit exactly like
+      `logical`), reads the device-observed running ratio from the
+      residency ledger (``TierStore.resident_bytes`` /
+      ``compression_ratio``) and corrects itself against ledger deltas
+      at every commit boundary.  A trace device storing KV at >2x
+      therefore admits a strictly larger concurrent batch than a word
+      device at the same ``kv_capacity_bytes`` — the paper's
+      compression ratio acting as the serving control signal rather
+      than a reporting statistic.
+
+    Precision-elastic reclamation: with a ``degrade_ladder`` configured
+    (and the `physical` model), a blocked head-of-line request triggers
+    :meth:`KVPagePool.reclaim` across the active requests' pools before
+    admission stalls — cold stored pages shed mantissa planes in place,
+    the ledger shrinks, the ratio estimate rises, and the admission
+    check is retried.  With the ladder disabled (the default) stored
+    bytes are never touched and per-request tokens stay bit-identical
+    to solo runs.
 
     The differential guarantee extends to dynamic membership: per-key
     program order on the shared queue means each request's decoded tokens
@@ -568,11 +658,23 @@ class ServeScheduler:
         hbm_kv_budget: int = 1 << 12,
         max_seq: Optional[int] = None,
         kv_capacity_bytes: Optional[int] = None,
+        capacity_model: str = "logical",
+        degrade_ladder: Optional[Sequence] = None,
         async_io: bool = True,
         sys: SystemSpec = SystemSpec(),
     ):
         from .paging import PAPER_POLICY as _paper
 
+        if capacity_model not in ("logical", "physical"):
+            raise ValueError(f"unknown capacity model {capacity_model!r}")
+        if degrade_ladder and capacity_model != "physical":
+            # Reclamation frees *stored* bytes; logical admission compares
+            # raw projections that never shrink, so a ladder could only
+            # destroy precision without ever unblocking anything.  Refuse
+            # loudly rather than silently ignoring the flag.
+            raise ValueError(
+                "degrade_ladder requires capacity_model='physical'"
+            )
         self.cfg = cfg
         self.params = params
         self.device = (make_device(device_kind)
@@ -583,6 +685,8 @@ class ServeScheduler:
         self.page_tokens = page_tokens
         self.hbm_kv_budget = hbm_kv_budget
         self.kv_capacity_bytes = kv_capacity_bytes
+        self.capacity_model = capacity_model
+        self.degrade_ladder = tuple(degrade_ladder or ())
         self.async_io = async_io
         self.sys = sys
         self._max_seq = max_seq
@@ -592,6 +696,17 @@ class ServeScheduler:
         self.clock = 0                  # scheduler ticks (decode rounds)
         self.model_time_s = 0.0
         self.kv_committed_bytes = 0     # projections of active requests
+        self.peak_active = 0            # largest admitted batch reached
+        self.reclaimed_bytes = 0        # ladder-freed physical bytes
+        # Ratio-aware admission feedback: seeds neutral (admit like the
+        # logical model), tracks the device-observed running compression
+        # ratio from the residency ledger, corrected at every commit
+        # boundary (see _update_ratio).
+        self.kv_ratio_estimate = 1.0
+        self._ratio_seeded = False
+        self._ledger_mark = (0, 0)      # (raw, physical) at last correction
+        self._kv_per_token: Optional[int] = None   # cached projection slope
+        self._first_this_tick: List[RequestRecord] = []
         self._next_id = 0
         self._io_mark = self._io_snapshot()
 
@@ -617,10 +732,16 @@ class ServeScheduler:
             need = total + self.page_tokens
             if self._max_seq is None or self._max_seq < need:
                 self._max_seq = max(self._max_seq or 0, need)
+            # The projection is the cached per-token increment times the
+            # request's completed page windows — the eval_shape trace
+            # runs once per scheduler, not once per admission check.
+            if self._kv_per_token is None:
+                self._kv_per_token = _kv_bytes_per_token(self.cfg, self.batch)
             self.records[r.req_id] = RequestRecord(
                 req_id=r.req_id, arrival=r.arrival,
                 kv_projected_bytes=projected_kv_bytes(
-                    self.cfg, self.batch, total, self.page_tokens),
+                    self.cfg, self.batch, total, self.page_tokens,
+                    per_token=self._kv_per_token),
             )
             self.pending.append(r)
         self.pending.sort(key=lambda r: (r.arrival, r.req_id))
@@ -638,11 +759,19 @@ class ServeScheduler:
         priced into the same tick — including the run's final tick, which
         has no later tick to absorb it."""
         self._admit()
+        self.peak_active = max(self.peak_active, self.n_active)
         self._decode_round()
         for seq in self.active:
             if seq is not None and seq.done:
                 seq.engine.retire()
         self._advance_time()
+        # First-token stamps land after the tick's time advance: TTFT
+        # includes the round that actually produced the token.
+        for rec in self._first_this_tick:
+            rec.first_token_step = self.clock
+            rec.t_first_token_s = self.model_time_s
+        self._first_this_tick.clear()
+        self._update_ratio()
         self._retire()
         self.clock += 1
         return bool(self.pending or any(s is not None for s in self.active))
@@ -667,6 +796,10 @@ class ServeScheduler:
             model_time_s=self.model_time_s,
             decode_tokens=sum(r.tokens.size for r in done),
             prefill_tokens=sum(r.prefill_tokens for r in done),
+            peak_active=self.peak_active,
+            capacity_model=self.capacity_model,
+            kv_ratio_estimate=self.kv_ratio_estimate,
+            reclaimed_bytes=self.reclaimed_bytes,
         )
 
     # -- internals -----------------------------------------------------------
@@ -674,6 +807,80 @@ class ServeScheduler:
         d = self.device.stats
         return (d.dram_bytes_read + d.dram_bytes_written,
                 d.link_bytes_in + d.link_bytes_out)
+
+    def _projected_physical(self, logical_bytes: int) -> int:
+        """Map a logical-KV projection to the bytes the device is
+        expected to store for it under the current ratio estimate."""
+        if self.capacity_model == "logical":
+            return logical_bytes
+        return int(np.ceil(logical_bytes
+                           / max(self.kv_ratio_estimate, 1e-6)))
+
+    def _kv_fits(self, rec: RequestRecord) -> bool:
+        if self.kv_capacity_bytes is None:
+            return True
+        if not any(s is not None for s in self.active):
+            return True                  # empty-batch escape (no deadlock)
+        need = self.kv_committed_bytes + rec.kv_projected_bytes
+        return self._projected_physical(need) <= self.kv_capacity_bytes
+
+    def _update_ratio(self):
+        """Correct the admission ratio estimate against the residency
+        ledger — called at every commit boundary (scheduler tick).
+
+        Prefers the delta since the last correction (fresh commits are
+        the best predictor of the next request's storage behavior);
+        falls back to the absolute stored ratio when the tick freed
+        bytes (retirement, reclamation) or committed nothing."""
+        raw = self.device.stats.raw_bytes_stored
+        phys = self.device.resident_bytes()
+        d_raw = raw - self._ledger_mark[0]
+        d_phys = phys - self._ledger_mark[1]
+        self._ledger_mark = (raw, phys)
+        if d_raw > 0 and d_phys > 0:
+            obs = d_raw / d_phys
+        elif raw > 0 and phys > 0:
+            obs = raw / phys
+        else:
+            return                       # device empty: keep the estimate
+        if not self._ratio_seeded:
+            # first stored bytes: adopt the observed ratio outright (the
+            # neutral 1.0 was a placeholder, not a measurement)
+            self.kv_ratio_estimate = obs
+            self._ratio_seeded = True
+        else:
+            self.kv_ratio_estimate += 0.5 * (obs - self.kv_ratio_estimate)
+
+    def _reclaim_for(self, rec: RequestRecord) -> bool:
+        """Blocked-admission pressure valve: shed cold stored planes
+        across the active requests' pools until the head-of-line
+        request's projection fits, then re-check.  Returns True when the
+        reclamation unblocked admission.
+
+        The deficit is denominated in *projected* physical bytes while
+        reclaim frees *stored* bytes, so one pass is not guaranteed to
+        unblock — the fit re-check only moves through the corrected
+        ratio estimate.  Sustained pressure therefore keeps degrading
+        cold pages, bounded by ladder exhaustion (``reclaim`` returns 0
+        once every cold page sits at the last rung, and the admission
+        stalls exactly like the ladderless scheduler).  That
+        precision-for-capacity trade is the documented contract of
+        enabling a ladder."""
+        if not self.degrade_ladder or self.capacity_model != "physical":
+            return False
+        need = self.kv_committed_bytes + rec.kv_projected_bytes
+        deficit = self._projected_physical(need) - self.kv_capacity_bytes
+        freed = 0
+        for seq in self.active:
+            if seq is None or freed >= deficit:
+                continue
+            freed += seq.engine.pool.reclaim(deficit - freed,
+                                             self.degrade_ladder)
+        if freed == 0:
+            return False
+        self.reclaimed_bytes += freed
+        self._update_ratio()             # the ledger just shrank
+        return self._kv_fits(rec)
 
     def _admit(self):
         # Stamp every request the trace has delivered by now: queueing
@@ -688,10 +895,7 @@ class ServeScheduler:
         while free and self.pending and self.pending[0].arrival <= self.clock:
             req = self.pending[0]
             rec = self.records[req.req_id]
-            if (self.kv_capacity_bytes is not None
-                    and any(s is not None for s in self.active)
-                    and self.kv_committed_bytes + rec.kv_projected_bytes
-                    > self.kv_capacity_bytes):
+            if not self._kv_fits(rec) and not self._reclaim_for(rec):
                 break                    # strict FIFO: wait for retirements
             self.pending.pop(0)
             self.kv_committed_bytes += rec.kv_projected_bytes
@@ -717,6 +921,8 @@ class ServeScheduler:
                 continue
             nxt = _sample_next(seq.logits, seq.rng, seq.req.greedy)
             seq.out.append(nxt)
+            if len(seq.out) == 1:
+                self._first_this_tick.append(seq.record)
             if len(seq.out) < seq.req.max_new_tokens:
                 seq.logits = seq.engine.decode(nxt.reshape(-1, 1))
             else:

@@ -1,0 +1,296 @@
+"""Physical-footprint residency ledger + precision-elastic reclamation.
+
+Covers the ledger invariant (resident_bytes == stored payload+index
+bytes under arbitrary write/delete/truncate interleavings), in-place
+plane truncation (reclaimed bytes reconcile exactly with the ledger
+delta; degraded blocks decode bit-identically to ``reconstruct_u16`` at
+the surviving view), the pool's degradation-ladder ``reclaim`` walk,
+and the explicit empty-denominator values of the stats properties.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.bitplane import BLOCK_ELEMS
+from repro.core.precision import FULL, MAN0, MAN2, MAN4, VIEWS
+from repro.core.tier import (
+    DeviceStats, KV, LinkModel, ReadReq, WriteReq, make_device,
+)
+from repro.core.precision import truncate_reference
+from repro.runtime.paging import (
+    DEFAULT_DEGRADE_LADDER, KVPagePool, LOSSLESS_POLICY,
+)
+
+
+def _physical_bytes(dev, prefix=""):
+    """Ground truth the ledger must equal: walk the stored blocks."""
+    total = 0
+    for key, blocks in dev._tensors.items():
+        if key.startswith(prefix):
+            total += sum(b.stored_bytes + 64 for b in blocks)
+    return total
+
+
+def _assert_ledger(dev):
+    assert dev.resident_bytes() == _physical_bytes(dev)
+    # the ledger also ties out against the receipt-fed aggregates
+    assert dev.resident_bytes() == (dev.stats.dram_bytes_stored
+                                    + 64 * dev.stats.blocks)
+
+
+# ---------------------------------------------------------------------------
+# ledger bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_ledger_tracks_writes_and_deletes():
+    dev = make_device("trace", kv_window=16)
+    assert dev.resident_bytes() == 0
+    assert dev.compression_ratio() == 1.0
+    dev.submit([
+        WriteReq("a.x", synth.kv_cache(32, 64, seed=0), kind=KV),
+        WriteReq("b.y", np.arange(4096, dtype=np.uint16)),
+    ])
+    _assert_ledger(dev)
+    assert dev.resident_bytes("a.") + dev.resident_bytes("b.") \
+        == dev.resident_bytes()
+    assert dev.compression_ratio("a.") > 1.0   # KV transform compresses
+    # namespace delete returns that namespace's ledger to exactly zero
+    dev.delete_prefix("a.")
+    assert dev.resident_bytes("a.") == 0
+    _assert_ledger(dev)
+    dev.delete("b.y")
+    assert dev.resident_bytes() == 0
+    assert dev.compression_ratio() == 1.0
+
+
+def test_ledger_invariant_random_interleavings():
+    """Property: any interleaving of writes, deletes and truncations
+    keeps resident_bytes == stored payload+index bytes, and a namespace
+    delete zeroes exactly that namespace."""
+    rng = np.random.default_rng(7)
+    dev = make_device("trace", kv_window=16)
+    ladder = [MAN4, MAN2, MAN0]
+    live = set()
+    for step in range(120):
+        op = rng.integers(0, 10)
+        ns = f"n{rng.integers(0, 4)}."
+        key = f"{ns}k{rng.integers(0, 3)}"
+        if op < 5:                                   # write (tensor or KV)
+            if rng.integers(0, 2):
+                dev.submit([WriteReq(key, synth.kv_cache(
+                    16 * int(rng.integers(1, 4)), 64,
+                    seed=int(rng.integers(1 << 16))), kind=KV)])
+            else:
+                n = 8 * int(rng.integers(1, 600))
+                dev.submit([WriteReq(
+                    key, rng.integers(0, 1 << 16, n).astype(np.uint16))])
+            live.add(key)
+        elif op < 7 and live:                        # truncate a live key
+            victim = sorted(live)[int(rng.integers(len(live)))]
+            view = ladder[int(rng.integers(len(ladder)))]
+            before = dev.resident_bytes()
+            reclaimed = dev.truncate_planes([victim], view)
+            assert reclaimed == before - dev.resident_bytes()
+        elif op < 9:                                 # namespace delete
+            dev.delete_prefix(ns)
+            live = {k for k in live if not k.startswith(ns)}
+            assert dev.resident_bytes(ns) == 0
+        elif live:                                   # single-key delete
+            victim = sorted(live)[int(rng.integers(len(live)))]
+            dev.delete(victim)
+            live.discard(victim)
+        _assert_ledger(dev)
+    dev.delete_prefix("")
+    assert dev.resident_bytes() == 0 and dev.stats.blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# in-place plane truncation
+# ---------------------------------------------------------------------------
+
+def test_truncate_reclaims_and_reconciles_with_ledger():
+    dev = make_device("trace", kv_window=32)
+    dev.submit([WriteReq("s.p", synth.kv_cache(64, 64, seed=3), kind=KV)])
+    before = dev.resident_bytes("s.")
+    stored_before = dev.stats.dram_bytes_stored
+    reclaimed = dev.truncate_planes(["s.p"], MAN4)
+    assert reclaimed > 0
+    assert dev.resident_bytes("s.") == before - reclaimed
+    assert dev.stats.dram_bytes_stored == stored_before - reclaimed
+    # logical footprint unchanged: same elements, fewer stored planes
+    assert dev.logical_bytes("s.p") == dev.stats.raw_bytes_stored
+    assert dev.compression_ratio("s.") > before / max(before, 1)
+    # idempotent at the same rung; deeper rungs reclaim more
+    assert dev.truncate_planes(["s.p"], MAN4) == 0
+    assert dev.truncate_planes(["s.p"], MAN0) > 0
+    # unknown keys are ignored
+    assert dev.truncate_planes(["s.missing"], MAN0) == 0
+
+
+def test_truncated_kv_decodes_at_surviving_view():
+    """Differential: after truncation to view V, a FULL read returns
+    exactly what an untruncated device serves at V (same plane-aligned
+    fetch + guard rounding, i.e. ``reconstruct_u16`` at V)."""
+    kv = synth.kv_cache(64, 64, seed=11)
+    for view in (MAN4, MAN2, MAN0):
+        cut, ref = (make_device("trace", kv_window=16) for _ in range(2))
+        for d in (cut, ref):
+            d.submit([WriteReq("s.p", kv, kind=KV)])
+        cut.truncate_planes(["s.p"], view)
+        got = cut.submit([ReadReq("s.p", kind=KV)])[0].data
+        want = ref.submit([ReadReq("s.p", kind=KV, view=view)])[0].data
+        np.testing.assert_array_equal(got, want)
+        # narrower requested views still work against the truncated store
+        got2 = cut.submit([ReadReq("s.p", kind=KV, view=MAN0)])[0].data
+        want2 = ref.submit([ReadReq("s.p", kind=KV, view=MAN0)])[0].data
+        np.testing.assert_array_equal(got2, want2)
+
+
+def test_truncated_tensor_matches_reconstruct_reference():
+    """Tensor path, against the precision oracle directly: a degraded
+    block read back at FULL is bit-identical to ``truncate_reference``
+    (mask to fetched planes + ``reconstruct_u16``) on the host copy."""
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 1 << 16, BLOCK_ELEMS * 2).astype(np.uint16)
+    dev = make_device("trace")    # bitplane-kv layout; tensor keeps raw exp
+    dev.submit([WriteReq("t", data)])
+    for view in (MAN4, MAN2):
+        dev.truncate_planes(["t"], view)
+        got = dev.submit([ReadReq("t")])[0].data
+        np.testing.assert_array_equal(got, truncate_reference(data, view))
+
+
+def test_truncate_cuts_read_traffic_and_link_bits():
+    dev = make_device("trace", kv_window=32)
+    dev.submit([WriteReq("s.p", synth.kv_cache(64, 64, seed=9), kind=KV)])
+    full = dev.submit([ReadReq("s.p", kind=KV)])[0]
+    dev.truncate_planes(["s.p"], MAN0)
+    cut = dev.submit([ReadReq("s.p", kind=KV)])[0]
+    assert cut.dram_bytes_read < full.dram_bytes_read
+    # link carries the surviving view's bits, not the full container
+    assert cut.link_bytes_out == cut.data.size * MAN0.bits // 8
+
+
+def test_truncate_unsupported_on_word_layouts():
+    for kind in ("plain", "gcomp"):
+        dev = make_device(kind)
+        dev.submit([WriteReq("t", np.arange(4096, dtype=np.uint16))])
+        with pytest.raises(NotImplementedError):
+            dev.truncate_planes(["t"], MAN4)
+
+
+def test_truncate_kv_must_keep_delta_exponent():
+    dev = make_device("trace", kv_window=16)
+    dev.submit([WriteReq("s.p", synth.kv_cache(16, 64, seed=1), kind=KV)])
+    with pytest.raises(ValueError):
+        dev.truncate_planes(["s.p"], VIEWS["man4"].__class__(r_e=4, r_m=4))
+
+
+def test_blocks_after_truncation_store_full_precision():
+    """Truncation degrades only already-stored blocks: later appends to
+    the same stream commit (and read back) at full precision."""
+    dev = make_device("trace", kv_window=16)
+    first = synth.kv_cache(16, 64, seed=2)
+    dev.submit([WriteReq("s.p", first, kind=KV)])
+    dev.truncate_planes(["s.p"], MAN0)
+    second = synth.kv_cache(16, 64, seed=3)
+    dev.submit([WriteReq("s.p", second, kind=KV)])
+    out = dev.submit([ReadReq("s.p", kind=KV)])[0].data
+    np.testing.assert_array_equal(out[16:], second)   # new window exact
+    _assert_ledger(dev)
+
+
+# ---------------------------------------------------------------------------
+# pool-level reclamation (degradation ladder)
+# ---------------------------------------------------------------------------
+
+def _spilled_pool(n_pages=6, device="trace",
+                  ladder=DEFAULT_DEGRADE_LADDER):
+    pool = KVPagePool(device, page_tokens=16, hbm_budget_bytes=0,
+                      policy=LOSSLESS_POLICY, key_prefix="r0.",
+                      degrade_ladder=ladder)
+    rng = np.random.default_rng(3)
+    pool.append_pages([
+        (0, "k", 16 * i,
+         synth.kv_cache(16, 64, seed=40 + i), float(i))
+        for i in range(n_pages)
+    ])
+    return pool
+
+
+def test_pool_reclaim_walks_ladder_and_reports_ledger_delta():
+    pool = _spilled_pool()
+    assert pool.spilled_pages == 6 and pool.hbm_bytes == 0
+    before = pool.device_resident_bytes
+    assert pool.physical_kv_bytes == before
+    freed = pool.reclaim(1)            # one rung of the coldest page
+    assert freed > 0
+    assert pool.device_resident_bytes == before - freed
+    assert pool._pages[0].degrade_level == 0
+    # a big target walks every page through every rung, then dries up
+    freed2 = pool.reclaim(1 << 30)
+    assert freed2 > 0
+    assert all(p.degrade_level == len(DEFAULT_DEGRADE_LADDER) - 1
+               for p in pool._pages)
+    assert pool.reclaim(1 << 30) == 0  # ladder exhausted
+    assert pool.release() > 0
+    assert pool.device_resident_bytes == 0
+
+
+def test_pool_reclaim_zero_on_word_device_and_empty_ladder():
+    pool = _spilled_pool(device="gcomp")
+    assert pool.reclaim(1 << 20) == 0       # word layout cannot shed planes
+    pool2 = _spilled_pool()
+    assert pool2.reclaim(1 << 20, ladder=()) == 0
+    assert pool2.reclaim(0) == 0
+    # lossy shedding is strictly opt-in: a default-constructed pool has
+    # no ladder and reclaim never touches stored data
+    bare = _spilled_pool(ladder=())
+    assert bare.degrade_ladder == ()
+    assert bare.reclaim(1 << 20) == 0
+
+
+def test_scheduler_rejects_ladder_without_physical_model():
+    from repro.runtime import ServeScheduler
+
+    with pytest.raises(ValueError):
+        ServeScheduler(None, None, capacity_model="logical",
+                       degrade_ladder=DEFAULT_DEGRADE_LADDER)
+
+
+# ---------------------------------------------------------------------------
+# explicit empty-denominator values
+# ---------------------------------------------------------------------------
+
+def test_bypass_rate_zero_without_codec_blocks():
+    assert DeviceStats().bypass_rate == 0.0
+    dev = make_device("plain")               # no codec in the word layout
+    dev.submit([WriteReq("t", np.arange(4096, dtype=np.uint16))])
+    assert dev.stats.codec_blocks == 0
+    assert dev.stats.bypass_rate == 0.0
+
+
+def test_scheduler_report_empty_denominators():
+    from repro.runtime.serving import SchedulerReport
+
+    rep = SchedulerReport(records=[], steps=0, model_time_s=0.0,
+                          decode_tokens=0, prefill_tokens=0)
+    assert rep.tok_s == 0.0
+    assert np.isnan(rep.p50_ttft_s) and np.isnan(rep.p99_ttft_s)
+    assert np.isnan(rep.mean_tpot_s)
+    assert np.isnan(rep.latency_percentile(90))
+    assert rep.peak_active == 0 and rep.reclaimed_bytes == 0
+
+
+def test_link_model_design_anchors():
+    """Named devices derive base_s from the calibrated load-to-use
+    pipeline (71/84/89 cycles @ 2 GHz); an explicit link_model kwarg
+    overrides the anchor with a constant."""
+    assert make_device("plain").link_model.base_s == pytest.approx(35.5e-9)
+    assert make_device("gcomp").link_model.base_s == pytest.approx(42e-9)
+    assert make_device("trace").link_model.base_s == pytest.approx(44.5e-9)
+    assert LinkModel.for_design("trace", comp_ratio=3.0).base_s \
+        == pytest.approx(42.5e-9)
+    const = make_device("trace", link_model=LinkModel(base_s=1e-6))
+    assert const.link_model.base_s == 1e-6

@@ -236,3 +236,103 @@ def test_scheduler_report_empty():
                           decode_tokens=0, prefill_tokens=0)
     assert rep.tok_s == 0.0
     assert np.isnan(rep.p50_latency_s) and np.isnan(rep.mean_queue_delay_s)
+
+
+def test_capacity_model_validated():
+    with pytest.raises(ValueError):
+        ServeScheduler(None, None, capacity_model="psychic")
+
+
+# ---------------------------------------------------------------------------
+# ratio-aware admission + precision-elastic reclamation + TTFT/TPOT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_physical_model_admits_larger_batch(engine_pair):
+    """The tentpole claim: at a fixed kv_capacity_bytes on the trace
+    device, ledger/ratio-aware admission overlaps requests the logical
+    projection would serialize — larger peak batch, more tok/s — and
+    with the degrade ladder disabled every request's tokens stay
+    bit-identical to a solo run."""
+    cfg, params = engine_pair
+    proj = projected_kv_bytes(cfg, 1, 32 + 5, 16)
+    cap = int(1.7 * proj)        # logical: only 1 fits; physical: ≥ 2
+    reps = {}
+    for model in ("logical", "physical"):
+        sched = _sched(cfg, params, max_batch=3, kv_capacity_bytes=cap,
+                       capacity_model=model)
+        reps[model] = sched.run(_reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0]))
+    assert reps["logical"].peak_active == 1
+    assert reps["physical"].peak_active > reps["logical"].peak_active
+    assert reps["physical"].tok_s > reps["logical"].tok_s
+    assert reps["physical"].kv_ratio_estimate > 1.0
+    assert reps["physical"].reclaimed_bytes == 0      # no ladder configured
+    # differential holds under the more aggressive membership
+    for req, rec in zip(_reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0]),
+                        reps["physical"].records):
+        solo = ServeEngine(
+            cfg, params, max_seq=sched._max_seq, batch=1, page_tokens=16,
+            hbm_kv_budget=1 << 12, device_kind="trace",
+            policy=LOSSLESS_POLICY,
+        ).generate(req.prompt, req.max_new_tokens, seed=req.seed)
+        np.testing.assert_array_equal(solo, rec.tokens)
+
+
+@pytest.mark.slow
+def test_degrade_ladder_reclaims_before_stalling(engine_pair):
+    """With the ladder on, a blocked head-of-line request sheds cold
+    stored planes (TierStore.truncate_planes) instead of waiting for a
+    retirement; the reclaimed bytes show up in the report and the run
+    still drains cleanly."""
+    from repro.runtime.paging import DEFAULT_DEGRADE_LADDER
+
+    cfg, params = engine_pair
+    proj = projected_kv_bytes(cfg, 1, 32 + 5, 16)
+    tight = _sched(cfg, params, max_batch=3,
+                   kv_capacity_bytes=int(1.5 * proj),
+                   capacity_model="physical")
+    rep_tight = tight.run(_reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0]))
+    ladder = _sched(cfg, params, max_batch=3,
+                    kv_capacity_bytes=int(1.5 * proj),
+                    capacity_model="physical",
+                    degrade_ladder=DEFAULT_DEGRADE_LADDER)
+    rep = ladder.run(_reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0]))
+    assert rep.reclaimed_bytes > 0
+    assert rep.peak_active >= rep_tight.peak_active
+    assert len(rep.records) == 3 and all(r.finished for r in rep.records)
+    d = ladder.device_stats()
+    assert d.dram_bytes_stored == 0 and d.blocks == 0
+    assert ladder.device.resident_bytes() == 0
+
+
+@pytest.mark.slow
+def test_ttft_tpot_split(engine_pair):
+    """Latency decomposes: queue wait ≤ TTFT ≤ total latency, and
+    TTFT + (n-1)·TPOT reconstructs the finish stamp exactly."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params, max_batch=1)   # forced queueing
+    rep = sched.run(_reqs(cfg, 3, arrivals=[0.0, 0.0, 0.0], new=4))
+    assert np.isfinite(rep.p50_ttft_s) and np.isfinite(rep.p99_ttft_s)
+    assert rep.mean_tpot_s > 0
+    for r in rep.records:
+        assert 0 <= r.queue_delay_s <= r.ttft_s <= r.latency_s
+        assert r.first_token_step >= r.admit_step
+        n = r.tokens.shape[1]
+        assert r.ttft_s + (n - 1) * r.tpot_s == pytest.approx(r.latency_s)
+    # queued requests pay their wait in TTFT, not TPOT
+    assert rep.records[2].ttft_s > rep.records[0].ttft_s
+    assert rep.p99_ttft_s >= rep.p50_ttft_s
+
+
+@pytest.mark.slow
+def test_single_token_request_tpot_nan(engine_pair):
+    """One generated token has no inter-token gap: tpot_s is the
+    explicit NaN, TTFT equals total latency, and the report's mean
+    excludes it rather than crashing."""
+    cfg, params = engine_pair
+    sched = _sched(cfg, params)
+    rep = sched.run(_reqs(cfg, 1, arrivals=[0.0], new=1))
+    r = rep.records[0]
+    assert np.isnan(r.tpot_s)
+    assert r.ttft_s == pytest.approx(r.latency_s)
+    assert np.isnan(rep.mean_tpot_s)

@@ -270,7 +270,9 @@ def test_queue_delay_and_overlap_latency_model():
         assert r.latency_s == pytest.approx(r.queue_delay_s + r.service_s)
     assert max(lats) < sum(r.service_s for r in recs)
     # the schedule helper agrees with an explicit cumulative computation
-    lm = LinkModel()
+    # (the device's own model: named designs carry the calibrated
+    # controller-anchor base_s, not the LinkModel() default constant)
+    lm = dev.link_model
     traffic = [(r.dram_bytes_read, r.link_bytes_out) for r in recs]
     cum_d = cum_l = 0
     for (d, l), r in zip(traffic, recs):

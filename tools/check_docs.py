@@ -127,6 +127,8 @@ def build_symbol_tables():
     strings.update(codecs.CODECS)
     strings.update((tier.TENSOR, tier.KV))
     strings.update(("poisson", "bursty"))   # synth.request_trace kinds
+    strings.update(("logical", "physical"))  # ServeScheduler capacity models
+    strings.update(("none", "default"))      # --degrade-ladder specs
     return modules, bare, strings
 
 
