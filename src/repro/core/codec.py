@@ -48,7 +48,7 @@ try:
 
     _ZSTD_C = _zstd.ZstdCompressor(level=3)
     _ZSTD_D = _zstd.ZstdDecompressor()
-except Exception:  # pragma: no cover
+except (ImportError, AttributeError):  # pragma: no cover - optional dep
     _zstd = None
 
 HAVE_ZSTD = _zstd is not None
@@ -462,6 +462,7 @@ def zstd_compress_batch(chunks: Sequence[bytes]) -> List[bytes]:
         try:
             res = _ZSTD_C.multi_compress_to_buffer(list(chunks))
             return [res[i].tobytes() for i in range(len(res))]
+        # tracecheck: allow-broad-except(multi_compress raises build-specific types; falls back to the byte-identical per-chunk loop)
         except Exception:  # pragma: no cover - library/build specific
             pass
     return [_ZSTD_C.compress(c) for c in chunks]

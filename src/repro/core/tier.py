@@ -126,7 +126,8 @@ compressed containers and report truncation unsupported.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
@@ -344,6 +345,192 @@ class DeviceStats:
         return self.raw_bytes_stored / max(self.dram_bytes_stored, 1)
 
 
+# ---------------------------------------------------------------------------
+# Runtime invariant sanitizer (TRACE_SANITIZE=1 / TierStore(sanitize=True))
+# ---------------------------------------------------------------------------
+
+class SanitizerViolation(AssertionError):
+    """A live accounting invariant broke under sanitize mode.
+
+    Carries the violated invariant's name, the key (or key prefix) it
+    was detected on, and the expected/actual values — the runtime
+    counterpart of the ``tools/tracecheck`` static rules.
+    """
+
+    def __init__(self, invariant: str, key: str = "", expected=None,
+                 actual=None, detail: str = ""):
+        self.invariant = invariant
+        self.key = key
+        self.expected = expected
+        self.actual = actual
+        self.detail = detail
+        msg = (f"[{invariant}] key={key!r} expected={expected!r} "
+               f"actual={actual!r}")
+        if detail:
+            msg += f" — {detail}"
+        super().__init__(msg)
+
+
+class _MirroredStats(DeviceStats):
+    """DeviceStats wired to the sanitizer's shadow aggregate so a
+    caller's ``stats.reset_traffic()`` resets both sides in lockstep
+    (direct field pokes still desync and trip the sanitizer — that is
+    the point)."""
+
+    def __init__(self, mirror: DeviceStats):
+        super().__init__()
+        self._mirror = mirror
+
+    def reset_traffic(self):
+        super().reset_traffic()
+        self._mirror.reset_traffic()
+
+
+class _Sanitizer:
+    """Always-on invariant checks for one :class:`TierStore`.
+
+    Enabled by ``TierStore(sanitize=True)`` or ``TRACE_SANITIZE=1``;
+    zero overhead when off (the store holds ``None``).  Validated at
+    every commit boundary (write post, read group, KV flush) and on the
+    retirement paths (``delete`` / ``delete_prefix`` /
+    ``truncate_planes``):
+
+    * ``ledger-stored-equality`` — each residency-ledger row equals its
+      key's stored payload/index/raw bytes and block count, and the
+      ledger totals equal the stats capacity fields;
+    * ``receipt-conservation`` — ``stats`` equals a shadow aggregate
+      rebuilt from every receipt through the sanctioned helpers
+      (receipts-sum == ``DeviceStats``);
+    * ``busy-clock-monotonic`` — host time and the per-pipe busy
+      frontiers never move backwards;
+    * ``inflight-window-bound`` — queued reads never exceed ``window``;
+    * ``retire-cleanup`` — a delete leaves no orphaned blocks, ledger
+      rows, staging buffers, shapes, channel metadata or index-cache
+      entries behind.
+    """
+
+    __slots__ = ("store", "shadow", "_now", "_ddr", "_link")
+
+    _LEDGER_FIELDS = ("payload_bytes", "index_bytes", "raw_bytes", "blocks")
+    _CAPACITY_FIELDS = ("dram_bytes_stored", "raw_bytes_stored", "blocks")
+
+    def __init__(self, store: "TierStore"):
+        self.store = store
+        self.shadow = DeviceStats()
+        self._now = self._ddr = self._link = 0.0
+
+    def boundary(self, touched: Optional[Set[str]] = None):
+        """Full commit-boundary validation (per-key checks limited to
+        ``touched`` keys; aggregates always checked)."""
+        self.check_clock()
+        self.check_window()
+        self.check_ledger(touched)
+        self.check_conservation()
+
+    def check_clock(self):
+        s = self.store
+        for attr, last in (("_now_s", self._now), ("_ddr_free_s", self._ddr),
+                           ("_link_free_s", self._link)):
+            cur = getattr(s, attr)
+            if cur < last - 1e-12:
+                raise SanitizerViolation(
+                    "busy-clock-monotonic", key=attr,
+                    expected=f">= {last!r}", actual=cur,
+                    detail="busy-clock frontier moved backwards",
+                )
+        self._now, self._ddr, self._link = (s._now_s, s._ddr_free_s,
+                                            s._link_free_s)
+
+    def check_window(self):
+        s = self.store
+        if len(s._queue) > s.window:
+            raise SanitizerViolation(
+                "inflight-window-bound", expected=f"<= {s.window}",
+                actual=len(s._queue),
+                detail="queued reads exceed the in-flight window",
+            )
+
+    def check_ledger(self, touched: Optional[Set[str]] = None):
+        s = self.store
+        if set(s._ledger) != set(s._tensors):
+            only_l = sorted(set(s._ledger) - set(s._tensors))
+            only_t = sorted(set(s._tensors) - set(s._ledger))
+            raise SanitizerViolation(
+                "ledger-stored-equality", key=(only_l + only_t)[0],
+                expected="ledger keys == stored keys",
+                actual=f"ledger-only={only_l[:3]} stored-only={only_t[:3]}",
+            )
+        keys = (s._ledger if touched is None
+                else [k for k in touched if k in s._ledger])
+        for key in keys:
+            entry = s._ledger[key]
+            blocks = s._tensors[key]
+            want = (sum(b.stored_bytes for b in blocks),
+                    len(blocks) * INDEX_ENTRY_BYTES,
+                    sum(b.valid_elems for b in blocks) * 2, len(blocks))
+            got = tuple(getattr(entry, f) for f in self._LEDGER_FIELDS)
+            if want != got:
+                raise SanitizerViolation(
+                    "ledger-stored-equality", key=key,
+                    expected=dict(zip(self._LEDGER_FIELDS, want)),
+                    actual=dict(zip(self._LEDGER_FIELDS, got)),
+                    detail="residency ledger row != stored bytes",
+                )
+        totals = (sum(e.payload_bytes for e in s._ledger.values()),
+                  sum(e.raw_bytes for e in s._ledger.values()),
+                  sum(e.blocks for e in s._ledger.values()))
+        stat = tuple(getattr(s.stats, f) for f in self._CAPACITY_FIELDS)
+        if totals != stat:
+            raise SanitizerViolation(
+                "ledger-stored-equality",
+                expected=dict(zip(self._CAPACITY_FIELDS, totals)),
+                actual=dict(zip(self._CAPACITY_FIELDS, stat)),
+                detail="ledger totals != stats capacity fields",
+            )
+
+    def check_conservation(self):
+        for f in dataclasses.fields(DeviceStats):
+            want = getattr(self.shadow, f.name)
+            got = getattr(self.store.stats, f.name)
+            if want != got:
+                raise SanitizerViolation(
+                    "receipt-conservation", key=f.name, expected=want,
+                    actual=got,
+                    detail="stats field drifted from the receipts-sum "
+                           "shadow (mutated outside the sanctioned "
+                           "helpers?)",
+                )
+
+    def check_retired(self, prefix: Optional[str] = None,
+                      key: Optional[str] = None):
+        s = self.store
+
+        def gone(k: str) -> bool:
+            return k == key if key is not None else k.startswith(prefix)
+
+        stores = (("stored blocks", s._tensors), ("ledger", s._ledger),
+                  ("shapes", s._shapes), ("kv staging", s._kv_staging),
+                  ("kv channels", s._kv_channels))
+        target = key if key is not None else prefix
+        for what, d in stores:
+            left = sorted(k for k in d if gone(k))
+            if left:
+                raise SanitizerViolation(
+                    "retire-cleanup", key=target,
+                    expected="no surviving entries",
+                    actual=f"{what}: {left[:3]}",
+                    detail="delete left orphaned keys behind",
+                )
+        left = sorted({k[0] for k in s._index._lru if gone(k[0])})
+        if left:
+            raise SanitizerViolation(
+                "retire-cleanup", key=target,
+                expected="no surviving entries",
+                actual=f"index cache: {left[:3]}",
+                detail="delete left orphaned index-cache entries behind",
+            )
+
+
 @dataclasses.dataclass
 class _Block:
     """One 4 KB logical block in device DRAM."""
@@ -548,7 +735,7 @@ def _pack_slab(flat_u16: np.ndarray) -> np.ndarray:
         try:
             from ..kernels.bitplane import pack_planes_slab
             _PACK_SLAB = pack_planes_slab
-        except Exception:  # pragma: no cover - kernels unavailable
+        except ImportError:  # pragma: no cover - kernels unavailable
             _PACK_SLAB = lambda flat: pack_planes(flat)
     return _PACK_SLAB(flat_u16)
 
@@ -807,7 +994,8 @@ class TierStore:
                  codec: str = "lz4", block_elems: int = BLOCK_ELEMS,
                  index_cache_entries: int = 4096, kv_window: int = 64,
                  link_model: LinkModel = LinkModel(), window: int = 64,
-                 batched_encode: bool = True):
+                 batched_encode: bool = True,
+                 sanitize: Optional[bool] = None):
         self.layout = LAYOUTS[layout]() if isinstance(layout, str) else layout
         self.codec = codecs.resolve_codec(codec)
         self.block_elems = block_elems
@@ -815,7 +1003,15 @@ class TierStore:
         self.link_model = link_model
         self.window = window                 # max queued (in-flight) reads
         self.batched_encode = batched_encode  # False: scalar reference path
-        self.stats = DeviceStats()
+        # Runtime invariant sanitizer: explicit flag wins, else the
+        # TRACE_SANITIZE env var ("" / "0" = off).  See _Sanitizer.
+        if sanitize is None:
+            sanitize = os.environ.get("TRACE_SANITIZE", "").strip() \
+                not in ("", "0")
+        self.sanitize = bool(sanitize)
+        self._san = _Sanitizer(self) if self.sanitize else None
+        self.stats = (_MirroredStats(self._san.shadow) if self._san
+                      else DeviceStats())
         # Physical-footprint residency ledger: one entry per stored key,
         # equal to that key's stored payload+index bytes at all times.
         self._ledger: Dict[str, ResidencyEntry] = {}
@@ -857,6 +1053,33 @@ class TierStore:
                     raise KeyError(req.key)
             else:
                 raise TypeError(f"not a tier request: {req!r}")
+
+    # -- sanctioned accounting helpers (lint rule R3) -------------------------
+    def _apply_receipt(self, rec: Receipt):
+        """Fold one receipt into the running aggregate — the only
+        sanctioned path for receipt-driven stats mutation (and the
+        point where the sanitizer's shadow aggregate stays in step)."""
+        self.stats.apply(rec)
+        if self._san is not None:
+            self._san.shadow.apply(rec)
+
+    def _adjust_stored(self, payload: int = 0, raw: int = 0,
+                       blocks: int = 0):
+        """Capacity delta outside a receipt (deletes, in-place plane
+        truncation) — the only sanctioned path for direct capacity
+        mutation."""
+        self.stats.dram_bytes_stored += payload
+        self.stats.raw_bytes_stored += raw
+        self.stats.blocks += blocks
+        if self._san is not None:
+            sh = self._san.shadow
+            sh.dram_bytes_stored += payload
+            sh.raw_bytes_stored += raw
+            sh.blocks += blocks
+
+    def _sanitize_boundary(self, touched: Optional[Set[str]] = None):
+        if self._san is not None:
+            self._san.boundary(touched)
 
     # -- batched entry point -------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> List[Receipt]:
@@ -932,6 +1155,9 @@ class TierStore:
                 t = Ticket(self, req)
                 self._queue.append(t)
                 tickets[i] = t
+        if self._san is not None:
+            self._san.check_window()
+            self._san.check_clock()
         return [tickets[i] for i in range(len(requests))]
 
     @property
@@ -1026,6 +1252,8 @@ class TierStore:
         Queued-but-unexecuted reads are NOT forced — use :meth:`drain`.
         """
         self._now_s = max(self._now_s, self._ddr_free_s, self._link_free_s)
+        if self._san is not None:
+            self._san.check_clock()
 
     # -- write path ----------------------------------------------------------
     def _post_write(self, req: WriteReq) -> Receipt:
@@ -1073,7 +1301,8 @@ class TierStore:
                 )
                 for rec in recs:
                     # whatever was committed stays counted
-                    self.stats.apply(rec)
+                    self._apply_receipt(rec)
+                self._sanitize_boundary({r.key for r in reqs})
         return recs
 
     def _stage_write(self, req: WriteReq, rec: Receipt, slab: "_EncodeSlab"):
@@ -1210,7 +1439,8 @@ class TierStore:
             return self._gather_and_decode(reqs, recs)
         finally:
             for rec in recs:
-                self.stats.apply(rec)
+                self._apply_receipt(rec)
+            self._sanitize_boundary({r.key for r in reqs})
 
     def _gather_and_decode(self, reqs: Sequence[ReadReq],
                            recs: List[Receipt]) -> List[Receipt]:
@@ -1380,8 +1610,9 @@ class TierStore:
                           else _intersect_views(b.view, view))
             if freed:
                 self._ledger[key].payload_bytes -= freed
-                self.stats.dram_bytes_stored -= freed
+                self._adjust_stored(payload=-freed)
                 reclaimed += freed
+        self._sanitize_boundary(set(keys))
         return reclaimed
 
     def delete(self, key: str):
@@ -1390,16 +1621,22 @@ class TierStore:
         if self._queue:
             self._flush_queue(len(self._queue), wait=True)
         self._forget(key)
+        if self._san is not None:
+            self._san.boundary()
+            self._san.check_retired(key=key)
 
     def _forget(self, key: str, evict_index: bool = True):
         """Drop one key's blocks, staging, shape and index entries,
         returning the stored capacity to the device (queue already
         flushed by the caller).  ``evict_index=False`` lets a namespace
         delete purge the index cache in one pass instead of per key."""
-        for b in self._tensors.pop(key, []):
-            self.stats.dram_bytes_stored -= b.stored_bytes
-            self.stats.raw_bytes_stored -= b.valid_elems * 2
-            self.stats.blocks -= 1
+        dropped = self._tensors.pop(key, [])
+        if dropped:
+            self._adjust_stored(
+                payload=-sum(b.stored_bytes for b in dropped),
+                raw=-sum(b.valid_elems for b in dropped) * 2,
+                blocks=-len(dropped),
+            )
         self._ledger.pop(key, None)
         self._shapes.pop(key, None)
         self._kv_staging.pop(key, None)
@@ -1429,6 +1666,9 @@ class TierStore:
         for k in keys:
             self._forget(k, evict_index=False)
         self._index.evict_prefix(prefix)
+        if self._san is not None:
+            self._san.boundary()
+            self._san.check_retired(prefix=prefix)
         return len(keys)
 
     # -- legacy shims (deprecated; forward to submit) ------------------------
@@ -1454,7 +1694,8 @@ class TierStore:
                 self._flush_queue(len(self._queue), wait=True)
             rec = Receipt(key=stream, op="write", kind=KV)
             self._commit_kv_window(rec, stream)
-            self.stats.apply(rec)
+            self._apply_receipt(rec)
+            self._sanitize_boundary({stream})
 
 
 # ---------------------------------------------------------------------------

@@ -86,7 +86,7 @@ def _unpack_kernel(planes_ref, out_ref, *, keep_mask: int, cut: int,
 def _accel_backend() -> str:
     try:
         return jax.default_backend()
-    except Exception:  # pragma: no cover - no runtime available
+    except RuntimeError:  # pragma: no cover - no runtime available
         return "cpu"
 
 

@@ -104,6 +104,7 @@ def serve(
     streams: int = 1,
     async_io: bool = True,
     seed: int = 0,
+    sanitize: bool | None = None,
 ):
     cfg = ARCHS[arch]
     if smoke:
@@ -117,6 +118,7 @@ def serve(
         hbm_kv_budget=hbm_kv_budget,
         policy=policy,
         async_io=async_io,
+        sanitize=sanitize,
     )
     rng = np.random.default_rng(seed)
     if streams > 1:
@@ -173,6 +175,7 @@ def serve_continuous(
     lossless_only: bool = False,
     async_io: bool = True,
     seed: int = 0,
+    sanitize: bool | None = None,
 ):
     """Continuous-batching mode: run a synthetic arrival trace through the
     ServeScheduler and report throughput + latency percentiles."""
@@ -190,6 +193,7 @@ def serve_continuous(
         batch=batch, page_tokens=page_tokens, hbm_kv_budget=hbm_kv_budget,
         kv_capacity_bytes=kv_capacity_bytes, capacity_model=capacity_model,
         degrade_ladder=degrade_ladder, async_io=async_io,
+        sanitize=sanitize,
     )
     rep = sched.run(trace)
     d = sched.device_stats()
@@ -252,6 +256,12 @@ def main():
                          "view names; blocked admissions shed cold "
                          "pages' mantissa planes in place before "
                          "stalling (requires --capacity-model physical)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the tier device with the accounting "
+                         "sanitizer on: every commit boundary re-checks "
+                         "the residency ledger, receipt conservation, "
+                         "busy-clock monotonicity and retire cleanup "
+                         "(same as TRACE_SANITIZE=1)")
     args = ap.parse_args()
     ladder = parse_degrade_ladder(args.degrade_ladder)
     if ladder and args.capacity_model != "physical":
@@ -273,12 +283,14 @@ def main():
             capacity_model=args.capacity_model,
             degrade_ladder=ladder,
             async_io=not args.sync_io, lossless_only=args.lossless_only,
+            sanitize=args.sanitize or None,
         )
         return
     serve(arch=args.arch, device=args.device, n_tokens=args.tokens,
           prompt_len=args.prompt_len, batch=args.batch,
           streams=args.streams, async_io=not args.sync_io,
-          lossless_only=args.lossless_only)
+          lossless_only=args.lossless_only,
+          sanitize=args.sanitize or None)
 
 
 if __name__ == "__main__":

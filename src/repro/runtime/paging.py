@@ -130,8 +130,10 @@ class KVPagePool:
         policy: PagePolicy = PAPER_POLICY,
         key_prefix: str = "",
         degrade_ladder: Sequence[PrecisionView] = (),
+        sanitize: Optional[bool] = None,
     ):
-        self.device = make_device(device) if isinstance(device, str) else device
+        self.device = (make_device(device, sanitize=sanitize)
+                       if isinstance(device, str) else device)
         self.page_tokens = page_tokens
         self.hbm_budget = hbm_budget_bytes
         self.policy = policy

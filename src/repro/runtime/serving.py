@@ -118,6 +118,7 @@ class ServeEngine:
         policy: PagePolicy = PAPER_POLICY,
         key_prefix: str = "",
         async_io: bool = True,
+        sanitize: Optional[bool] = None,
     ):
         assert not cfg.is_encoder_only, "serving needs a decoder"
         self.cfg = cfg
@@ -128,7 +129,7 @@ class ServeEngine:
         self.async_io = async_io
         self.pool = KVPagePool(
             device_kind, page_tokens, hbm_kv_budget, policy,
-            key_prefix=key_prefix,
+            key_prefix=key_prefix, sanitize=sanitize,
         )
         self.cache = init_cache(cfg, batch, max_seq)
         self.pos = 0
@@ -333,9 +334,10 @@ class MultiStreamEngine:
         *,
         device_kind: Union[str, TierStore] = "trace",
         async_io: bool = True,
+        sanitize: Optional[bool] = None,
         **engine_kw,
     ):
-        self.device = (make_device(device_kind)
+        self.device = (make_device(device_kind, sanitize=sanitize)
                        if isinstance(device_kind, str) else device_kind)
         self.streams = [
             ServeEngine(cfg, params, device_kind=self.device,
@@ -662,6 +664,7 @@ class ServeScheduler:
         degrade_ladder: Optional[Sequence] = None,
         async_io: bool = True,
         sys: SystemSpec = SystemSpec(),
+        sanitize: Optional[bool] = None,
     ):
         from .paging import PAPER_POLICY as _paper
 
@@ -677,7 +680,7 @@ class ServeScheduler:
             )
         self.cfg = cfg
         self.params = params
-        self.device = (make_device(device_kind)
+        self.device = (make_device(device_kind, sanitize=sanitize)
                        if isinstance(device_kind, str) else device_kind)
         self.max_batch = max_batch
         self.policy = _paper if policy is None else policy
@@ -709,6 +712,12 @@ class ServeScheduler:
         self._first_this_tick: List[RequestRecord] = []
         self._next_id = 0
         self._io_mark = self._io_snapshot()
+
+    @property
+    def max_seq(self) -> Optional[int]:
+        """Largest sequence budget any submitted request has needed so far
+        (grown by :meth:`submit`; ``None`` until the first request)."""
+        return self._max_seq
 
     # -- request intake ------------------------------------------------------
     def submit(self, requests: Sequence[Union[ServeRequest, dict]]):

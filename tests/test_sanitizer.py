@@ -1,0 +1,161 @@
+"""Runtime accounting sanitizer: happy path stays silent through full
+write/read/truncate/delete cycles, and each invariant trips — with the
+violation naming it — under targeted fault injection (corrupted ledger
+row, dropped receipt, rewound busy clock, oversized in-flight window,
+skipped retirement cleanup).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.precision import VIEWS
+from repro.core.tier import (
+    ReadReq, SanitizerViolation, WriteReq, make_device,
+)
+
+
+def _payload(seed=0, shape=(64, 256)):
+    return np.random.default_rng(seed).integers(
+        0, 1 << 16, size=shape, dtype=np.uint16)
+
+
+def _loaded_device(n_keys=3, **kw):
+    dev = make_device("trace", sanitize=True, **kw)
+    for i in range(n_keys):
+        dev.submit([WriteReq(key=f"k{i}", data=_payload(i))])
+    return dev
+
+
+# ---------------------------------------------------------------------------
+# activation plumbing
+# ---------------------------------------------------------------------------
+
+def test_env_var_activates(monkeypatch):
+    monkeypatch.setenv("TRACE_SANITIZE", "1")
+    assert make_device("trace").sanitize
+    monkeypatch.setenv("TRACE_SANITIZE", "0")
+    assert not make_device("trace").sanitize
+    monkeypatch.delenv("TRACE_SANITIZE")
+    assert not make_device("trace").sanitize
+
+
+def test_explicit_flag_beats_env(monkeypatch):
+    monkeypatch.setenv("TRACE_SANITIZE", "1")
+    assert not make_device("trace", sanitize=False).sanitize
+    monkeypatch.delenv("TRACE_SANITIZE")
+    assert make_device("trace", sanitize=True).sanitize
+
+
+def test_default_is_off(monkeypatch):
+    monkeypatch.delenv("TRACE_SANITIZE", raising=False)
+    dev = make_device("trace")
+    assert not dev.sanitize and dev._san is None
+
+
+# ---------------------------------------------------------------------------
+# happy path: real workloads run clean under the sanitizer
+# ---------------------------------------------------------------------------
+
+def test_clean_lifecycle_all_devices():
+    for kind in ("plain", "gcomp", "trace"):
+        dev = make_device(kind, sanitize=True)
+        dev.submit([WriteReq(key="a", data=_payload(1)),
+                    WriteReq(key="b", data=_payload(2))])
+        recs = dev.submit([ReadReq(key="a"), ReadReq(key="b")])
+        assert all(np.array_equal(r.data, _payload(i + 1))
+                   for i, r in enumerate(recs))
+        dev.delete("a")
+        assert dev.delete_prefix("") == 1
+        assert dev.stats.dram_bytes_stored == 0 and dev.stats.blocks == 0
+
+
+def test_clean_async_and_truncate():
+    dev = _loaded_device()
+    tickets = dev.submit_async([ReadReq(key="k0"), ReadReq(key="k1")])
+    dev.drain()
+    assert all(t.done for t in tickets)
+    freed = dev.truncate_planes(["k0", "k2"], VIEWS["man4"])
+    assert freed > 0
+    dev.quiesce()
+    dev.delete_prefix("k")
+    assert dev.stats.blocks == 0
+
+
+def test_reset_traffic_keeps_shadow_in_sync():
+    dev = _loaded_device()
+    dev.stats.reset_traffic()          # the bench/test idiom must not trip
+    dev.submit([ReadReq(key="k0")])
+    dev.delete_prefix("k")
+
+
+# ---------------------------------------------------------------------------
+# fault injection: each invariant trips and names itself
+# ---------------------------------------------------------------------------
+
+def test_corrupt_ledger_row_trips():
+    dev = _loaded_device()
+    dev._ledger["k1"].payload_bytes += 7
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit([ReadReq(key="k1")])
+    assert ei.value.invariant == "ledger-stored-equality"
+    assert ei.value.key == "k1"
+    assert "payload_bytes" in str(ei.value)
+
+
+def test_orphaned_ledger_key_trips():
+    dev = _loaded_device()
+    dev._ledger["ghost"] = dev._ledger["k0"]
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit([WriteReq(key="k3", data=_payload(3))])
+    assert ei.value.invariant == "ledger-stored-equality"
+    assert ei.value.key == "ghost"
+
+
+def test_dropped_receipt_trips_conservation():
+    dev = _loaded_device()
+    # a stats poke that bypasses _apply_receipt desyncs the shadow
+    dev.stats.dram_bytes_read += 100
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit([WriteReq(key="k3", data=_payload(3))])
+    assert ei.value.invariant == "receipt-conservation"
+    assert ei.value.key == "dram_bytes_read"
+    assert ei.value.actual - ei.value.expected == 100
+
+
+def test_rewound_clock_trips_monotonicity():
+    dev = _loaded_device()
+    assert dev._ddr_free_s > 0         # the writes kept the DDR pipe busy
+    dev._ddr_free_s = 0.0              # rewind it behind the remembered mark
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.quiesce()
+    assert ei.value.invariant == "busy-clock-monotonic"
+
+
+def test_oversized_window_trips_bound():
+    dev = _loaded_device(window=8)
+    dev.submit_async([ReadReq(key="k0"), ReadReq(key="k1")])
+    dev.window = 1                     # shrink under the queued tickets
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit_async([WriteReq(key="k3", data=_payload(3))])
+    assert ei.value.invariant == "inflight-window-bound"
+
+
+def test_skipped_retirement_cleanup_trips():
+    dev = _loaded_device()
+    dev._forget = lambda key, evict_index=True: None   # retirement no-op
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.delete_prefix("k")
+    assert ei.value.invariant == "retire-cleanup"
+    assert ei.value.key == "k"
+    assert "orphaned" in str(ei.value)
+
+
+def test_unsanitized_device_does_not_trip(monkeypatch):
+    """The same faults pass silently with the sanitizer off — the checks
+    are genuinely gated, not always-on overhead."""
+    monkeypatch.delenv("TRACE_SANITIZE", raising=False)
+    dev = make_device("trace")
+    dev.submit([WriteReq(key="a", data=_payload(1))])
+    dev._ledger["a"].payload_bytes += 7
+    dev.stats.dram_bytes_read += 100
+    dev.submit([WriteReq(key="b", data=_payload(2))])   # no raise

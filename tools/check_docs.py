@@ -47,7 +47,8 @@ IDENT = re.compile(
     r"^[A-Za-z_][A-Za-z0-9_-]*(\.[A-Za-z_][A-Za-z0-9_-]*)*$"
 )
 FILE_EXT = re.compile(r"\.(md|py|yml|yaml|json|toml|txt|sh|cfg)$")
-SKIP_WORDS = set(keyword.kwlist) | {"True", "False", "None"}
+SKIP_WORDS = set(keyword.kwlist) | {"True", "False", "None",
+                                    "isinstance", "setattr", "getattr"}
 
 
 def iter_backtick_tokens(path: Path):
@@ -86,6 +87,7 @@ def build_symbol_tables():
             continue
         try:
             modules[info.name] = importlib.import_module(info.name)
+        # tracecheck: allow-broad-except(imports of optional env-specific modules may fail arbitrarily; warn and keep checking)
         except Exception as e:  # pragma: no cover - env-specific deps
             print(f"[check_docs] warning: cannot import {info.name}: {e}")
 
@@ -129,6 +131,17 @@ def build_symbol_tables():
     strings.update(("poisson", "bursty"))   # synth.request_trace kinds
     strings.update(("logical", "physical"))  # ServeScheduler capacity models
     strings.update(("none", "default"))      # --degrade-ladder specs
+    # tracecheck rule ids + the sanitizer's invariant names (structured
+    # vocabulary of tools/tracecheck and TierStore(sanitize=True))
+    strings.update(("R1", "R2", "R3", "R4", "R5", "R6", "R1-R6",
+                    "tracecheck", "tools.tracecheck", "tools/tracecheck",
+                    "TRACE_SANITIZE"))
+    strings.update(("ledger-stored-equality", "receipt-conservation",
+                    "busy-clock-monotonic", "inflight-window-bound",
+                    "retire-cleanup"))
+    # jax public API the docs reference when describing R6 (not part of
+    # repro's surface, but real names all the same)
+    strings.update(("pallas_call", "block_until_ready"))
     return modules, bare, strings
 
 

@@ -1,0 +1,55 @@
+"""tracecheck — architectural lint for the TierStore stack.
+
+Static AST analysis enforcing the repo's structural contracts (the
+boundaries that make the accounting invariants provable):
+
+* R1  no cross-module access to ``_``-private attributes of
+      ``repro.core`` / ``repro.runtime`` objects
+* R2  no ``isinstance`` dispatch on ``Layout`` / ``TierStore`` subtypes
+      outside ``core/tier.py``
+* R3  ``Receipt`` / ``DeviceStats`` accounting fields mutate only
+      through the sanctioned helpers in ``core/tier.py``
+* R4  async discipline: every ``submit_async`` result reaches a
+      ``wait()`` / ``drain()`` / ``quiesce()`` (or escapes to a caller
+      that can) on all paths
+* R5  no broad ``except Exception:`` without a
+      ``# tracecheck: allow-broad-except(<reason>)`` pragma
+* R6  no host-sync or Python RNG inside ``jax.jit`` / ``pallas_call``
+      bodies
+
+Run: ``python -m tools.tracecheck src benchmarks examples``
+The runtime counterpart of this lint is ``TierStore(sanitize=True)`` /
+``TRACE_SANITIZE=1`` (see ``repro.core.tier``).
+"""
+
+from .core import Diagnostic, FileContext, ProjectIndex, Rule, run_paths
+from .rules_flow import R4AsyncDiscipline, R5BroadExcept, R6JitPurity
+from .rules_privacy import (
+    R1PrivateAccess,
+    R2IsinstanceDispatch,
+    R3AccountingMutation,
+)
+
+ALL_RULES = (
+    R1PrivateAccess,
+    R2IsinstanceDispatch,
+    R3AccountingMutation,
+    R4AsyncDiscipline,
+    R5BroadExcept,
+    R6JitPurity,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "Diagnostic",
+    "FileContext",
+    "ProjectIndex",
+    "Rule",
+    "run_paths",
+    "R1PrivateAccess",
+    "R2IsinstanceDispatch",
+    "R3AccountingMutation",
+    "R4AsyncDiscipline",
+    "R5BroadExcept",
+    "R6JitPurity",
+]

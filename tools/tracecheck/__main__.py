@@ -1,0 +1,65 @@
+"""CLI: ``python -m tools.tracecheck [paths...] [--disable ...]``.
+
+Exit 0 when every enabled rule is clean (after pragmas), 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Sequence
+
+from . import ALL_RULES
+from .core import run_paths
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "tools")
+
+
+def _rule_ids(spec: str) -> List[str]:
+    return [r.strip().upper() for r in spec.split(",") if r.strip()]
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tracecheck",
+        description="architectural lint for the TierStore stack "
+                    "(R1-R6; see tools/tracecheck/__init__.py)",
+    )
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--disable", default="",
+                    help="comma-separated rule ids to skip")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    rules = [cls() for cls in ALL_RULES]
+    if args.list_rules:
+        for rule in rules:
+            print(f"{rule.id}  {rule.name}: {rule.doc}")
+        return 0
+    selected = set(_rule_ids(args.select))
+    disabled = set(_rule_ids(args.disable))
+    unknown = (selected | disabled) - {r.id for r in rules}
+    if unknown:
+        ap.error(f"unknown rule id(s): {', '.join(sorted(unknown))}")
+    if selected:
+        rules = [r for r in rules if r.id in selected]
+    rules = [r for r in rules if r.id not in disabled]
+
+    diags = run_paths(args.paths, rules)
+    for d in diags:
+        print(d.format())
+    names = ",".join(r.id for r in rules)
+    if diags:
+        print(f"[tracecheck] {len(diags)} diagnostic(s) ({names})")
+        return 1
+    print(f"[tracecheck] OK ({names})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,243 @@
+"""Core machinery: diagnostics, pragmas, the cross-file project index
+and the rule runner.
+
+Pragmas (comment directives, same line or the line directly above the
+construct they cover):
+
+* ``# tracecheck: disable=R1[,R3]`` — suppress specific rules
+* ``# tracecheck: allow-broad-except(<reason>)`` — R5's escape hatch; a
+  non-empty reason is mandatory, it is the reviewable justification
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+# Modules owning the private attributes R1 protects, and the one file
+# allowed to touch accounting fields / subtype dispatch (R2, R3).
+PRIVATE_MODULE_DIRS = ("src/repro/core", "src/repro/runtime")
+SANCTIONED_ACCOUNTING_FILE = "src/repro/core/tier.py"
+
+_PRAGMA = re.compile(r"#\s*tracecheck:\s*(.*)$")
+_DISABLE = re.compile(r"disable=([A-Z0-9,\s]+)")
+_ALLOW_BROAD = re.compile(r"allow-broad-except\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One ``file:line`` finding from one rule."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Rule:
+    """A pluggable check: walk one file's AST, yield diagnostics.
+
+    Subclasses set ``id`` (the stable ``R<n>`` the CLI toggles and the
+    pragmas name) and implement :meth:`check`.
+    """
+
+    id = ""
+    name = ""
+    doc = ""
+
+    def check(self, ctx: "FileContext") -> Iterator[Diagnostic]:
+        raise NotImplementedError
+
+    def diag(self, ctx: "FileContext", node: ast.AST, message: str) -> Diagnostic:
+        return Diagnostic(self.id, ctx.rel, getattr(node, "lineno", 1),
+                          getattr(node, "col_offset", 0) + 1, message)
+
+
+def _private_attr_defs(tree: ast.AST) -> Set[str]:
+    """Private attribute names a module's classes define: ``self._x``
+    assignments, class-level ``_x`` bindings, ``__slots__`` entries and
+    ``def _method`` members.  Dunders are public protocol, not private."""
+
+    def is_private(name: str) -> bool:
+        return name.startswith("_") and not name.startswith("__")
+
+    defs: Set[str] = set()
+    for cls in (n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)):
+        for node in ast.walk(cls):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if is_private(node.name):
+                    defs.add(node.name)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if (isinstance(leaf, ast.Attribute)
+                                and isinstance(leaf.value, ast.Name)
+                                and leaf.value.id in ("self", "cls")
+                                and is_private(leaf.attr)):
+                            defs.add(leaf.attr)
+                        elif (isinstance(leaf, ast.Name) and leaf is t
+                                and is_private(leaf.id)):
+                            defs.add(leaf.id)
+        for stmt in cls.body:     # __slots__ = ("_a", "_b")
+            if (isinstance(stmt, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "__slots__"
+                            for t in stmt.targets)):
+                for leaf in ast.walk(stmt.value):
+                    if (isinstance(leaf, ast.Constant)
+                            and isinstance(leaf.value, str)
+                            and is_private(leaf.value)):
+                        defs.add(leaf.value)
+    return defs
+
+
+def _dataclass_fields(tree: ast.AST, class_names: Sequence[str]) -> Set[str]:
+    fields: Set[str] = set()
+    for cls in (n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)):
+        if cls.name not in class_names:
+            continue
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                              ast.Name):
+                fields.add(stmt.target.id)
+    return fields
+
+
+class ProjectIndex:
+    """Cross-file facts the rules consult.
+
+    ``private_attrs`` maps each private attribute name to the set of
+    repo-relative module paths that define it (R1's ownership table);
+    ``accounting_fields`` is the ``Receipt`` / ``DeviceStats`` field
+    vocabulary R3 guards, read from ``core/tier.py`` itself so the rule
+    cannot drift from the dataclasses.  Tests may construct an empty
+    index and populate both directly.
+    """
+
+    # Fields shared with unrelated request/descriptor types; mutating a
+    # ``.key`` or ``.data`` is not accounting.
+    NON_ACCOUNTING_FIELDS = frozenset({"key", "op", "kind", "tag", "data"})
+
+    def __init__(self) -> None:
+        self.private_attrs: Dict[str, Set[str]] = {}
+        self.accounting_fields: Set[str] = set()
+
+    @classmethod
+    def scan(cls, repo_root: Path = REPO_ROOT) -> "ProjectIndex":
+        index = cls()
+        for rel_dir in PRIVATE_MODULE_DIRS:
+            base = repo_root / rel_dir
+            if not base.is_dir():
+                continue
+            for path in sorted(base.rglob("*.py")):
+                try:
+                    tree = ast.parse(path.read_text())
+                except SyntaxError:
+                    continue
+                rel = path.relative_to(repo_root).as_posix()
+                for attr in _private_attr_defs(tree):
+                    index.private_attrs.setdefault(attr, set()).add(rel)
+        tier = repo_root / SANCTIONED_ACCOUNTING_FILE
+        if tier.is_file():
+            tree = ast.parse(tier.read_text())
+            index.accounting_fields = (
+                _dataclass_fields(tree, ("Receipt", "DeviceStats"))
+                - cls.NON_ACCOUNTING_FIELDS
+            )
+        return index
+
+
+class FileContext:
+    """One parsed file plus its pragma tables, handed to every rule."""
+
+    def __init__(self, path: Path, source: str, index: ProjectIndex,
+                 repo_root: Path = REPO_ROOT) -> None:
+        self.path = path
+        self.source = source
+        self.index = index
+        try:
+            self.rel = path.resolve().relative_to(repo_root).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.tree = ast.parse(source)
+        # line -> suppressed rule ids; line -> broad-except reason
+        self.disabled: Dict[int, Set[str]] = {}
+        self.broad_except_ok: Dict[int, str] = {}
+        for lineno, line in enumerate(source.splitlines(), 1):
+            m = _PRAGMA.search(line)
+            if not m:
+                continue
+            body = m.group(1)
+            d = _DISABLE.search(body)
+            if d:
+                self.disabled[lineno] = {r.strip() for r in
+                                         d.group(1).split(",") if r.strip()}
+            a = _ALLOW_BROAD.search(body)
+            if a:
+                self.broad_except_ok[lineno] = a.group(1).strip()
+        # Private attrs this file's own classes define: accessing a
+        # sibling instance of your own class is not a boundary crossing.
+        self.own_private_attrs = _private_attr_defs(self.tree)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        for at in (line, line - 1):
+            if rule_id in self.disabled.get(at, ()):
+                return True
+        return False
+
+    def broad_except_reason(self, line: int) -> Optional[str]:
+        """The allow-broad-except reason covering ``line`` (same line or
+        the line above), or None."""
+        for at in (line, line - 1):
+            reason = self.broad_except_ok.get(at)
+            if reason:
+                return reason
+        return None
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part.startswith(".") or part == "__pycache__"
+                       for part in f.parts):
+                    continue
+                yield f
+
+
+def run_paths(paths: Sequence[str], rules: Sequence[Rule],
+              index: Optional[ProjectIndex] = None,
+              repo_root: Path = REPO_ROOT) -> List[Diagnostic]:
+    """Lint every ``.py`` under ``paths`` with ``rules``; returns the
+    surviving (unsuppressed) diagnostics sorted by position."""
+    if index is None:
+        index = ProjectIndex.scan(repo_root)
+    out: List[Diagnostic] = []
+    for path in iter_python_files(paths):
+        source = path.read_text()
+        try:
+            ctx = FileContext(path, source, index, repo_root)
+        except SyntaxError as e:
+            out.append(Diagnostic("E0", str(path), e.lineno or 1,
+                                  (e.offset or 0) + 1,
+                                  f"syntax error: {e.msg}"))
+            continue
+        for rule in rules:
+            for diag in rule.check(ctx):
+                if not ctx.suppressed(diag.rule, diag.line):
+                    out.append(diag)
+    out.sort(key=lambda d: (d.path, d.line, d.col, d.rule))
+    return out

@@ -1,0 +1,122 @@
+"""Boundary rules: private-attribute access (R1), subtype dispatch (R2)
+and accounting-field mutation (R3)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from .core import (
+    SANCTIONED_ACCOUNTING_FILE,
+    Diagnostic,
+    FileContext,
+    Rule,
+)
+
+# The closed protocol vocabulary R2 protects: consumers must speak the
+# TierStore request API, never dispatch on which concrete device or
+# layout is behind it.
+TIER_SUBTYPES = frozenset({
+    "Layout", "WordLayout", "BitplaneLayout",
+    "TierStore", "BaseDevice",
+    "PlainDevice", "GCompDevice", "TraceDevice",
+})
+
+
+def _is_private(name: str) -> bool:
+    return name.startswith("_") and not name.startswith("__")
+
+
+class R1PrivateAccess(Rule):
+    id = "R1"
+    name = "private-attribute-access"
+    doc = ("no access to _-private attributes of repro.core/repro.runtime "
+           "objects from outside their defining module")
+
+    def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
+        table = ctx.index.private_attrs
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Attribute) or not _is_private(node.attr):
+                continue
+            if isinstance(node.value, ast.Name) and node.value.id in ("self",
+                                                                      "cls"):
+                continue
+            owners = table.get(node.attr)
+            if not owners:
+                continue
+            if ctx.rel in owners or node.attr in ctx.own_private_attrs:
+                continue
+            yield self.diag(
+                ctx, node,
+                f"access to private attribute `{node.attr}` of "
+                f"{' / '.join(sorted(owners))} from outside its defining "
+                f"module — use the public API",
+            )
+
+
+def _type_names(node: ast.AST) -> Set[str]:
+    """Class names referenced by an isinstance() second argument."""
+    names: Set[str] = set()
+    work = list(node.elts) if isinstance(node, ast.Tuple) else [node]
+    for n in work:
+        if isinstance(n, ast.Name):
+            names.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            names.add(n.attr)
+    return names
+
+
+class R2IsinstanceDispatch(Rule):
+    id = "R2"
+    name = "tier-subtype-dispatch"
+    doc = ("no isinstance dispatch on Layout/TierStore subtypes outside "
+           "core/tier.py — behavior differences belong behind the layout/"
+           "device protocol")
+
+    def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
+        if ctx.rel == SANCTIONED_ACCOUNTING_FILE:
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "isinstance"
+                    and len(node.args) == 2):
+                continue
+            hits = _type_names(node.args[1]) & TIER_SUBTYPES
+            if hits:
+                yield self.diag(
+                    ctx, node,
+                    f"isinstance dispatch on tier subtype(s) "
+                    f"{', '.join(sorted(hits))} outside core/tier.py — "
+                    f"extend the Layout/TierStore protocol instead",
+                )
+
+
+class R3AccountingMutation(Rule):
+    id = "R3"
+    name = "accounting-field-mutation"
+    doc = ("Receipt/DeviceStats accounting fields mutate only through the "
+           "sanctioned helpers in core/tier.py (TierStore._apply_receipt / "
+           "TierStore._adjust_stored)")
+
+    def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
+        fields = ctx.index.accounting_fields
+        if not fields or ctx.rel == SANCTIONED_ACCOUNTING_FILE:
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            else:
+                continue
+            for t in targets:
+                for leaf in ast.walk(t):
+                    if (isinstance(leaf, ast.Attribute)
+                            and leaf.attr in fields):
+                        yield self.diag(
+                            ctx, leaf,
+                            f"direct mutation of accounting field "
+                            f"`{leaf.attr}` — route it through the "
+                            f"sanctioned helpers in core/tier.py",
+                        )
