@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -16,6 +18,37 @@ def emit(table: str, name: str, value, unit: str = "", note: str = ""):
     ROWS.append((table, name, value, unit, note))
     val = f"{value:.4g}" if isinstance(value, float) else value
     print(f"{table},{name},{val},{unit},{note}", flush=True)
+
+
+def dump_json(module: str, first_row: int = 0,
+              duration_s: float | None = None,
+              out_dir: str | None = None) -> str | None:
+    """Write the rows emitted since ``first_row`` as ``BENCH_<module>.json``.
+
+    Destination: ``out_dir``, else the ``BENCH_JSON_DIR`` environment
+    variable; a no-op (returns None) when neither is set, so the CSV
+    stream on stdout stays the primary interface.  The artifact is one
+    JSON object per benchmark module — ``{"module", "rows",
+    "duration_s"}`` with each row a ``table/name/value/unit/note`` dict
+    — which CI uploads from the smoke jobs so every figure's numbers
+    are tracked across PRs instead of scrolling away in the job log.
+    """
+    dest = out_dir or os.environ.get("BENCH_JSON_DIR")
+    if not dest:
+        return None
+    os.makedirs(dest, exist_ok=True)
+    payload = {
+        "module": module,
+        "rows": [dict(zip(("table", "name", "value", "unit", "note"), r))
+                 for r in ROWS[first_row:]],
+    }
+    if duration_s is not None:
+        payload["duration_s"] = round(duration_s, 3)
+    path = os.path.join(dest, f"BENCH_{module}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def timed(fn, *args, reps: int = 3, **kw):

@@ -133,3 +133,6 @@ if __name__ == "__main__":
     import sys
 
     run(smoke="--smoke" in sys.argv)
+    from .common import dump_json
+
+    dump_json("kernels_bench")         # no-op unless BENCH_JSON_DIR is set

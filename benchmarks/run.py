@@ -2,6 +2,9 @@
 
 Prints ``table,name,value,unit,note`` CSV rows.  Run with
 ``PYTHONPATH=src python -m benchmarks.run`` (optionally ``--only fig15``).
+With ``--json-dir DIR`` (or ``BENCH_JSON_DIR`` in the environment) each
+module additionally writes its rows as a ``BENCH_<module>.json``
+artifact — the per-PR perf trajectory CI uploads.
 """
 
 from __future__ import annotations
@@ -9,6 +12,8 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+from .common import ROWS, dump_json
 
 MODULES = [
     "table1_direct",
@@ -27,6 +32,10 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module filter")
+    ap.add_argument("--json-dir", default=None,
+                    help="also write per-module BENCH_<module>.json "
+                         "artifacts here (defaults to $BENCH_JSON_DIR; "
+                         "unset = CSV only)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -36,10 +45,15 @@ def main() -> None:
         if only and name not in only:
             continue
         t0 = time.perf_counter()
+        mark = len(ROWS)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run()
-            print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+            dt = time.perf_counter() - t0
+            path = dump_json(name, first_row=mark, duration_s=dt,
+                             out_dir=args.json_dir)
+            print(f"# {name} done in {dt:.1f}s"
+                  + (f" → {path}" if path else ""),
                   file=sys.stderr, flush=True)
         # tracecheck: allow-broad-except(one failing benchmark is reported at exit; the rest of the suite still runs)
         except Exception as e:  # keep the suite running

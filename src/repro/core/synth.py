@@ -130,6 +130,7 @@ def request_trace(
     batch: int = 1,
     burst: int = 4,
     seed: int = 0,
+    share_prefix_len: int = 0,
 ) -> list:
     """Synthetic serving trace: one dict per request, sorted by arrival.
 
@@ -139,6 +140,11 @@ def request_trace(
     :class:`~repro.runtime.serving.ServeRequest` takes, without this
     module importing the runtime.  ``kind`` selects the arrival process
     (``"poisson"`` or ``"bursty"``).
+
+    ``share_prefix_len > 0`` models a common system prompt: the first
+    ``share_prefix_len`` tokens are drawn once and repeated verbatim in
+    every request's prompt (the tail stays per-request random) — the
+    workload shape shared-prefix KV reuse multiplies capacity on.
     """
     if kind == "poisson":
         arrivals = poisson_arrivals(n_requests, rate, seed=seed)
@@ -146,13 +152,19 @@ def request_trace(
         arrivals = bursty_arrivals(n_requests, rate, burst=burst, seed=seed)
     else:
         raise ValueError(f"unknown arrival kind {kind!r}")
+    if not 0 <= share_prefix_len <= prompt_len:
+        raise ValueError(
+            f"share_prefix_len={share_prefix_len} must be within "
+            f"[0, prompt_len={prompt_len}]")
     rng = np.random.default_rng(seed + 1)
+    head = rng.integers(0, vocab, (batch, share_prefix_len)).astype(np.int32)
     return [
         {
             "arrival": float(t),
-            "prompt": rng.integers(0, vocab, (batch, prompt_len)).astype(
-                np.int32
-            ),
+            "prompt": np.concatenate(
+                [head, rng.integers(
+                    0, vocab, (batch, prompt_len - share_prefix_len)
+                ).astype(np.int32)], axis=1),
             "max_new_tokens": new_tokens,
             "seed": seed + 1000 + i,
         }

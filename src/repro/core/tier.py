@@ -127,7 +127,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import (
+    Collection, Dict, List, Optional, Sequence, Set, Tuple, Union,
+)
 
 import numpy as np
 
@@ -345,6 +347,23 @@ class DeviceStats:
         return self.raw_bytes_stored / max(self.dram_bytes_stored, 1)
 
 
+def _ns_match(key: str, prefix: str) -> bool:
+    """Namespace-delimited prefix match for ledger/delete queries.
+
+    Key namespaces are ``.``-delimited (``r1.L0.k.0``, ``shared.<hash>.…``),
+    so a query for ``"r1"`` must never claim ``r10.``'s keys: an empty
+    prefix matches everything, an exact key matches itself, and otherwise
+    the prefix is extended to the next ``.`` boundary before matching.
+    """
+    if not prefix:
+        return True
+    if key == prefix:
+        return True
+    if not prefix.endswith("."):
+        prefix += "."
+    return key.startswith(prefix)
+
+
 # ---------------------------------------------------------------------------
 # Runtime invariant sanitizer (TRACE_SANITIZE=1 / TierStore(sanitize=True))
 # ---------------------------------------------------------------------------
@@ -406,10 +425,14 @@ class _Sanitizer:
     * ``inflight-window-bound`` — queued reads never exceed ``window``;
     * ``retire-cleanup`` — a delete leaves no orphaned blocks, ledger
       rows, staging buffers, shapes, channel metadata or index-cache
-      entries behind.
+      entries behind;
+    * ``refcount-conservation`` — each ledger row's reference count
+      equals a shadow count rebuilt from every commit / ``acquire`` /
+      ``release`` (shared pages are freed exactly when the last
+      reference retires, never earlier or later).
     """
 
-    __slots__ = ("store", "shadow", "_now", "_ddr", "_link")
+    __slots__ = ("store", "shadow", "refs", "_now", "_ddr", "_link")
 
     _LEDGER_FIELDS = ("payload_bytes", "index_bytes", "raw_bytes", "blocks")
     _CAPACITY_FIELDS = ("dram_bytes_stored", "raw_bytes_stored", "blocks")
@@ -417,6 +440,7 @@ class _Sanitizer:
     def __init__(self, store: "TierStore"):
         self.store = store
         self.shadow = DeviceStats()
+        self.refs: Dict[str, int] = {}
         self._now = self._ddr = self._link = 0.0
 
     def boundary(self, touched: Optional[Set[str]] = None):
@@ -476,6 +500,14 @@ class _Sanitizer:
                     actual=dict(zip(self._LEDGER_FIELDS, got)),
                     detail="residency ledger row != stored bytes",
                 )
+            want_refs = self.refs.get(key, 1)
+            if entry.refs != want_refs or entry.refs < 1:
+                raise SanitizerViolation(
+                    "refcount-conservation", key=key,
+                    expected=want_refs, actual=entry.refs,
+                    detail="ledger refcount drifted from the "
+                           "acquire/release shadow",
+                )
         totals = (sum(e.payload_bytes for e in s._ledger.values()),
                   sum(e.raw_bytes for e in s._ledger.values()),
                   sum(e.blocks for e in s._ledger.values()))
@@ -502,11 +534,16 @@ class _Sanitizer:
                 )
 
     def check_retired(self, prefix: Optional[str] = None,
-                      key: Optional[str] = None):
+                      key: Optional[str] = None,
+                      survivors: Collection[str] = ()):
+        """``survivors``: keys a namespace delete legitimately left behind
+        because other references still hold them (refcount > 0)."""
         s = self.store
 
         def gone(k: str) -> bool:
-            return k == key if key is not None else k.startswith(prefix)
+            if k in survivors:
+                return False
+            return k == key if key is not None else _ns_match(k, prefix)
 
         stores = (("stored blocks", s._tensors), ("ledger", s._ledger),
                   ("shapes", s._shapes), ("kv staging", s._kv_staging),
@@ -549,12 +586,21 @@ class _Block:
 
 @dataclasses.dataclass
 class ResidencyEntry:
-    """One key's row in the physical-footprint residency ledger."""
+    """One key's row in the physical-footprint residency ledger.
+
+    ``refs`` counts outstanding references to the key.  Private pages
+    stay at 1 for their whole life; content-addressed ``shared.`` pages
+    gain a reference per :meth:`TierStore.acquire` and lose one per
+    :meth:`TierStore.release` — the stored bytes are counted once here
+    regardless of how many referers hold the page, and are freed exactly
+    when the count reaches zero.
+    """
 
     payload_bytes: int = 0      # stored (post-compression) plane payloads
     index_bytes: int = 0        # 64 B per committed block (metadata)
     raw_bytes: int = 0          # logical (uncompressed) footprint
     blocks: int = 0
+    refs: int = 1               # outstanding references (shared pages > 1)
 
     @property
     def physical_bytes(self) -> int:
@@ -626,9 +672,9 @@ class _IndexCache:
             self._lru.pop(k)
 
     def evict_prefix(self, prefix: str):
-        """Drop every cached entry whose stream key starts with ``prefix``
-        (one LRU pass for a whole-namespace delete)."""
-        for k in [k for k in self._lru if k[0].startswith(prefix)]:
+        """Drop every cached entry whose stream key is in ``prefix``'s
+        namespace (one LRU pass for a whole-namespace delete)."""
+        for k in [k for k in self._lru if _ns_match(k[0], prefix)]:
             self._lru.pop(k)
 
 
@@ -1407,6 +1453,8 @@ class TierStore:
     def _commit(self, rec: Receipt, key: str, block: _Block):
         self._tensors.setdefault(key, []).append(block)
         entry = self._ledger.setdefault(key, ResidencyEntry())
+        if self._san is not None:
+            self._san.refs.setdefault(key, 1)
         entry.payload_bytes += block.stored_bytes
         entry.index_bytes += INDEX_ENTRY_BYTES
         entry.raw_bytes += block.valid_elems * 2
@@ -1544,19 +1592,24 @@ class TierStore:
         An empty prefix sums the whole device.  Equal to the sum of
         stored payload+index bytes at all times (the ledger invariant),
         which makes it the admission-control counterpart of the logical
-        :meth:`logical_bytes` projection."""
+        :meth:`logical_bytes` projection.  Matching is namespace-
+        delimited: ``"r1"`` and ``"r1."`` both mean the ``r1.`` namespace
+        (plus the exact key ``r1``) and never claim ``r10.``'s keys.
+        Shared (refcounted) pages are counted once however many referers
+        hold them."""
         if not prefix:
             return sum(e.physical_bytes for e in self._ledger.values())
         return sum(e.physical_bytes for k, e in self._ledger.items()
-                   if k.startswith(prefix))
+                   if _ns_match(k, prefix))
 
     def compression_ratio(self, prefix: str = "") -> float:
         """Observed logical/physical ratio of one namespace (1.0 when it
         holds nothing) — the feedback signal the ratio-aware admission
-        estimator corrects against at every commit boundary."""
+        estimator corrects against at every commit boundary.  Namespace-
+        delimited like :meth:`resident_bytes`."""
         raw = phys = 0
         for k, e in self._ledger.items():
-            if not prefix or k.startswith(prefix):
+            if _ns_match(k, prefix):
                 raw += e.raw_bytes
                 phys += e.physical_bytes
         return raw / phys if phys > 0 else 1.0
@@ -1578,6 +1631,11 @@ class TierStore:
         shed planes of an already-stored block; word layouts store
         opaque compressed containers and raise ``NotImplementedError``.
         Unknown keys are ignored (a cold page may already be deleted).
+        Keys with more than one outstanding reference are refused
+        (``ValueError``): degrading a shared page would silently change
+        what every other referer decodes, breaking their solo-run
+        differential — callers must skip shared pages or wait for the
+        refcount to drop to one.
         """
         if not self.layout.plane_aligned:
             raise NotImplementedError(
@@ -1585,6 +1643,13 @@ class TierStore:
                 "containers; in-place plane truncation needs a "
                 "plane-aligned layout"
             )
+        for key in keys:
+            entry = self._ledger.get(key)
+            if entry is not None and entry.refs > 1:
+                raise ValueError(
+                    f"cannot truncate {key!r}: {entry.refs} references "
+                    "hold this shared page"
+                )
         # In-flight reads were issued against the current plane mapping;
         # complete them before planes disappear (program order).
         if self._queue:
@@ -1615,7 +1680,69 @@ class TierStore:
         self._sanitize_boundary(set(keys))
         return reclaimed
 
+    def refcount(self, key: str) -> int:
+        """Outstanding references to ``key`` (0 when not stored)."""
+        entry = self._ledger.get(key)
+        return entry.refs if entry is not None else 0
+
+    def acquire(self, key: str) -> int:
+        """Take one more reference on a stored key (shared-page reuse).
+
+        The caller becomes a co-owner: the stored bytes stay counted once
+        in the ledger, and the key survives any single referer's
+        :meth:`release` / :meth:`delete` / :meth:`delete_prefix` until
+        the last reference retires.  Raises ``KeyError`` for unknown keys
+        and ``ValueError`` for truncated ones — a new referer must never
+        decode data degraded below what a solo run would have stored.
+        Returns the new reference count.
+        """
+        entry = self._ledger.get(key)
+        if entry is None:
+            raise KeyError(key)
+        if any(b.view is not None for b in self._tensors.get(key, ())):
+            raise ValueError(
+                f"cannot acquire {key!r}: stored planes were truncated; "
+                "a new referer would decode degraded data"
+            )
+        entry.refs += 1
+        if self._san is not None:
+            self._san.refs[key] = self._san.refs.get(key, 1) + 1
+            self._san.boundary({key})
+        return entry.refs
+
+    def release(self, key: str) -> int:
+        """Drop one reference; free the stored bytes at zero.
+
+        Returns the remaining reference count.  Raises ``KeyError`` for
+        unknown keys — a double release is an accounting bug, not a
+        no-op.
+        """
+        entry = self._ledger.get(key)
+        if entry is None:
+            raise KeyError(key)
+        if entry.refs > 1:
+            entry.refs -= 1
+            if self._san is not None:
+                self._san.refs[key] = self._san.refs.get(key, 1) - 1
+                self._san.boundary({key})
+            return entry.refs
+        # Last reference: in-flight reads were issued against the key's
+        # current mapping; complete them before the mapping disappears.
+        if self._queue:
+            self._flush_queue(len(self._queue), wait=True)
+        self._forget(key)
+        if self._san is not None:
+            self._san.boundary()
+            self._san.check_retired(key=key)
+        return 0
+
     def delete(self, key: str):
+        entry = self._ledger.get(key)
+        if entry is not None and entry.refs > 1:
+            # Shared page: deleting means giving up this caller's claim,
+            # never yanking bytes out from under the other referers.
+            self.release(key)
+            return
         # In-flight reads were issued against the key's current mapping;
         # complete them before the mapping disappears.
         if self._queue:
@@ -1641,34 +1768,52 @@ class TierStore:
         self._shapes.pop(key, None)
         self._kv_staging.pop(key, None)
         self._kv_channels.pop(key, None)
+        if self._san is not None:
+            self._san.refs.pop(key, None)
         if evict_index:
             self._index.evict_stream(key)
 
     def delete_prefix(self, prefix: str) -> int:
-        """Delete every key in one namespace (``key.startswith(prefix)``).
+        """Release every key in one namespace (``.``-delimited match, so
+        ``"r1"`` never claims ``r10.``'s keys).
 
         This is the retirement path of the continuous-batching scheduler:
         a finished request's pages live under a per-request key prefix, and
         one call frees its blocks, staged windows, shapes, KV-channel
         metadata and index-cache entries, returning the stored capacity to
         ``stats`` so the pool can admit queued requests into the headroom.
+        Keys other referers still hold (refcount > 1) drop one reference
+        and keep their bytes — they free when the last referer retires.
         Queued reads (any stream's) are drained first, exactly like
         :meth:`delete` — per-key program order means the flush cannot
         change any surviving stream's bytes.  Returns the number of keys
-        deleted.  An empty prefix clears the whole device.
+        released.  An empty prefix clears the whole device (releasing,
+        not force-freeing, shared keys).
         """
         if self._queue:
             self._flush_queue(len(self._queue), wait=True)
-        keys = {k for k in self._tensors if k.startswith(prefix)}
-        keys.update(k for k in self._kv_staging if k.startswith(prefix))
-        keys.update(k for k in self._kv_channels if k.startswith(prefix))
-        keys.update(k for k in self._shapes if k.startswith(prefix))
+        keys = {k for k in self._tensors if _ns_match(k, prefix)}
+        keys.update(k for k in self._kv_staging if _ns_match(k, prefix))
+        keys.update(k for k in self._kv_channels if _ns_match(k, prefix))
+        keys.update(k for k in self._shapes if _ns_match(k, prefix))
+        survivors = set()
         for k in keys:
-            self._forget(k, evict_index=False)
-        self._index.evict_prefix(prefix)
+            entry = self._ledger.get(k)
+            if entry is not None and entry.refs > 1:
+                entry.refs -= 1
+                if self._san is not None:
+                    self._san.refs[k] = self._san.refs.get(k, 1) - 1
+                survivors.add(k)
+            else:
+                self._forget(k, evict_index=False)
+        if not survivors:
+            self._index.evict_prefix(prefix)
+        else:
+            for k in keys - survivors:
+                self._index.evict_stream(k)
         if self._san is not None:
             self._san.boundary()
-            self._san.check_retired(prefix=prefix)
+            self._san.check_retired(prefix=prefix, survivors=survivors)
         return len(keys)
 
     # -- legacy shims (deprecated; forward to submit) ------------------------

@@ -78,6 +78,8 @@ serving modes (and the benchmark figure each corresponds to):
                          [--kv-capacity B]         pages — fig12_14's
                          [--capacity-model M]      throughput + p50/p99
                          [--degrade-ladder L]      latency vs offered load
+                         [--prefix-share]          shared-prefix KV reuse
+                         [--share-prefix-len N]
 
   The physical capacity model admits against the device's residency
   ledger (projection / observed compression ratio) instead of logical
@@ -85,6 +87,14 @@ serving modes (and the benchmark figure each corresponds to):
   same --kv-capacity; a degrade ladder (e.g. "man4,man2,man0") lets a
   blocked admission reclaim stored bytes by shedding mantissa planes of
   cold pages in place before stalling — fig12_14's capacity sweep.
+
+  --prefix-share stores identical completed prompt-prefix pages once
+  under the content-addressed shared. namespace (refcounted in the
+  residency ledger, copy-on-write past the divergence point) and
+  charges each admission only its *novel* KV projection;
+  --share-prefix-len makes the synthetic trace share its leading N
+  prompt tokens (a common system prompt) so the reuse has something to
+  bite on — fig12_14's prefix-share sweep.
 
 All modes keep per-sequence outputs bit-identical to a solo run of the
 same request; see docs/ARCHITECTURE.md for the dataflow.
@@ -172,6 +182,8 @@ def serve_continuous(
     kv_capacity_bytes: int | None = None,
     capacity_model: str = "logical",
     degrade_ladder=(),
+    prefix_share: bool = False,
+    share_prefix_len: int = 0,
     lossless_only: bool = False,
     async_io: bool = True,
     seed: int = 0,
@@ -187,13 +199,14 @@ def serve_continuous(
     trace = synth.request_trace(
         num_requests, cfg.vocab, rate=arrival_rate, kind=arrival_kind,
         prompt_len=prompt_len, new_tokens=n_tokens, batch=batch, seed=seed,
+        share_prefix_len=share_prefix_len,
     )
     sched = ServeScheduler(
         cfg, params, max_batch=max_batch, device_kind=device, policy=policy,
         batch=batch, page_tokens=page_tokens, hbm_kv_budget=hbm_kv_budget,
         kv_capacity_bytes=kv_capacity_bytes, capacity_model=capacity_model,
-        degrade_ladder=degrade_ladder, async_io=async_io,
-        sanitize=sanitize,
+        degrade_ladder=degrade_ladder, prefix_share=prefix_share,
+        async_io=async_io, sanitize=sanitize,
     )
     rep = sched.run(trace)
     d = sched.device_stats()
@@ -214,6 +227,12 @@ def serve_continuous(
               f"{rep.kv_ratio_estimate:.2f}x"
               + (f", reclaimed {rep.reclaimed_bytes} B via degrade ladder"
                  if rep.reclaimed_bytes else ""))
+    if prefix_share:
+        proj = sum(r.kv_projected_bytes for r in rep.records)
+        novel = sum(r.kv_charged_bytes for r in rep.records)
+        print(f"[serve] prefix share: admission charged {novel} of {proj} "
+              f"projected KV bytes ({proj - novel} B already resident as "
+              f"shared pages)")
     print(f"[serve] tier after retirement: stored {d.dram_bytes_stored} B, "
           f"{d.blocks} blocks (retired requests freed their namespaces)")
     return sched, rep
@@ -256,6 +275,16 @@ def main():
                          "view names; blocked admissions shed cold "
                          "pages' mantissa planes in place before "
                          "stalling (requires --capacity-model physical)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="store identical completed prompt-prefix KV "
+                         "pages once (content-addressed shared. "
+                         "namespace, refcounted ledger, copy-on-write "
+                         "at divergence) and charge admission only the "
+                         "novel-KV projection")
+    ap.add_argument("--share-prefix-len", type=int, default=0,
+                    help="leading prompt tokens shared verbatim by every "
+                         "synthetic request (a common system prompt); "
+                         "0 = fully independent prompts")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the tier device with the accounting "
                          "sanitizer on: every commit boundary re-checks "
@@ -270,6 +299,9 @@ def main():
             "reclamation frees stored bytes, which the logical "
             "projection never looks at"
         )
+    if args.share_prefix_len and not args.prefix_share:
+        print("[serve] note: --share-prefix-len shapes the trace only; "
+              "add --prefix-share to actually dedup the shared pages")
     if args.num_requests > 0:
         if args.streams > 1:
             print("[serve] note: --streams is ignored in continuous-"
@@ -282,10 +314,16 @@ def main():
             batch=args.batch, kv_capacity_bytes=args.kv_capacity or None,
             capacity_model=args.capacity_model,
             degrade_ladder=ladder,
+            prefix_share=args.prefix_share,
+            share_prefix_len=args.share_prefix_len,
             async_io=not args.sync_io, lossless_only=args.lossless_only,
             sanitize=args.sanitize or None,
         )
         return
+    if args.prefix_share:
+        print("[serve] note: --prefix-share applies to continuous-"
+              "batching mode (--num-requests N); single/multi-stream "
+              "runs have no cross-request reuse")
     serve(arch=args.arch, device=args.device, n_tokens=args.tokens,
           prompt_len=args.prompt_len, batch=args.batch,
           streams=args.streams, async_io=not args.sync_io,

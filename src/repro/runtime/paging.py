@@ -32,12 +32,22 @@ configurable degradation ladder of ``PrecisionView`` s via
 ``TierStore.truncate_planes`` (paper §III-C's in-place plane shedding),
 until the requested bytes are reclaimed or the ladder is exhausted.
 Word-layout devices cannot shed planes; reclaim then reports 0.
+
+Shared-prefix KV reuse: pools wired to one :class:`PrefixShareIndex`
+store identical completed *prompt-prefix* pages once, under a
+content-addressed ``shared.`` namespace keyed by a chained token-window
+hash (:func:`prefix_chain_hashes`).  The first pool to spill a window
+writes it; later pools acquire a refcounted ledger reference instead of
+writing (copy-on-write: windows past the token divergence point hash
+differently and stay private).  A shared page frees when its last
+referer retires, and degrades only while singly-referenced.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -73,6 +83,104 @@ class PagePolicy:
 PAPER_POLICY = PagePolicy()           # Table II: 5×BF16 / 3×FP8 / 2×FP4
 LOSSLESS_POLICY = PagePolicy(tiers=((1 << 30, FULL),), tail_view=FULL)
 
+
+def prefix_chain_hashes(tokens: np.ndarray, page_tokens: int) -> List[str]:
+    """Chained content hashes of the leading full token windows.
+
+    ``hashes[w]`` digests tokens ``[0, (w+1)*page_tokens)`` (all batch
+    rows), so it names the *entire* prefix up to the end of window ``w``
+    — exactly what the KV values of that window are a causal function
+    of.  Two requests get equal ``hashes[w]`` iff their prompts agree on
+    every token through that window, which is the copy-on-write
+    divergence rule: windows past the first differing token chain to
+    different digests and stay private.  Only full windows hash; a
+    partial tail (or a window containing generated tokens) never
+    shares.
+    """
+    h = hashlib.sha1(str(page_tokens).encode())
+    out: List[str] = []
+    arr = np.ascontiguousarray(tokens)
+    for w in range(arr.shape[-1] // page_tokens):
+        h.update(arr[..., w * page_tokens:(w + 1) * page_tokens].tobytes())
+        out.append(h.hexdigest()[:16])
+    return out
+
+
+def shared_page_key(share_hash: str, layer: int, kind: str) -> str:
+    """Content-addressed device key of one shared page: the chain hash
+    names the token prefix, layer/kind select the tensor — every request
+    whose prompt contains that prefix computes the same key."""
+    return f"shared.{share_hash}.L{layer}.{kind}"
+
+
+class PrefixShareIndex:
+    """Content-addressed index of shared prefix pages on one device.
+
+    Maps a prefix chain hash (see :func:`prefix_chain_hashes`) to the
+    ``shared.`` device keys holding that window's KV pages.  Pools
+    sharing a device (one :class:`ServeScheduler`'s engines) consult it
+    at spill time: the first pool to spill a window writes the page and
+    registers it; every later pool with an identical prompt prefix
+    *acquires* a reference (``TierStore.acquire``) instead of writing —
+    one stored copy, refcounted in the residency ledger, freed when the
+    last referer retires.  All pools must serve one model: the hash
+    names tokens, and identical tokens only imply identical KV under
+    identical params.
+    """
+
+    def __init__(self, device: TierStore):
+        self.device = device
+        # chain hash → {(layer, kind): key}; only live (stored) pages
+        self._nodes: Dict[str, Dict[Tuple[int, str], str]] = {}
+        self._owner: Dict[str, Tuple[str, Tuple[int, str]]] = {}
+
+    def acquire(self, share_hash: str, layer: int, kind: str) -> Optional[str]:
+        """Take a reference on the stored copy of (hash, layer, kind),
+        or return None when no pool has stored it yet."""
+        key = self._nodes.get(share_hash, {}).get((layer, kind))
+        if key is None:
+            return None
+        self.device.acquire(key)
+        return key
+
+    def register(self, share_hash: str, layer: int, kind: str, key: str):
+        """Record a freshly written shared page (writer holds the first
+        reference via its commit)."""
+        self._nodes.setdefault(share_hash, {})[(layer, kind)] = key
+        self._owner[key] = (share_hash, (layer, kind))
+
+    def invalidate(self, key: str):
+        """Drop a page from the index without releasing it — called
+        before a sole-referer page is degraded in place, so no future
+        request acquires (and decodes) the truncated copy."""
+        owner = self._owner.pop(key, None)
+        if owner is None:
+            return
+        share_hash, slot = owner
+        node = self._nodes.get(share_hash)
+        if node is not None:
+            node.pop(slot, None)
+            if not node:
+                self._nodes.pop(share_hash, None)
+
+    def release(self, key: str) -> int:
+        """Drop one reference; unindex the page when the last retires.
+        Returns the remaining reference count."""
+        left = self.device.release(key)
+        if left == 0:
+            self.invalidate(key)
+        return left
+
+    def resident_chain(self, hashes: Sequence[str]) -> int:
+        """How many *leading* windows of this hash chain have live shared
+        pages — the scheduler's novel-KV admission discount."""
+        n = 0
+        for h in hashes:
+            if not self._nodes.get(h):
+                break
+            n += 1
+        return n
+
 # Default precision-elastic degradation ladder: each reclaim rung sheds
 # further mantissa planes of cold stored pages in place (Table II's
 # BF16 → ~FP8 → ~FP4 progression, applied as a *storage* knob).
@@ -90,6 +198,8 @@ class _Page:
     resident: Optional[np.ndarray] = None   # HBM copy (token-major u16) or None
     commit_seq: int = 0       # commit boundary that admitted this page (LRU)
     degrade_level: int = -1   # last degradation-ladder rung applied
+    share_hash: Optional[str] = None  # prefix chain hash (shareable window)
+    shared_ref: bool = False  # this pool holds a ledger ref on a shared key
 
 
 @dataclasses.dataclass
@@ -131,6 +241,7 @@ class KVPagePool:
         key_prefix: str = "",
         degrade_ladder: Sequence[PrecisionView] = (),
         sanitize: Optional[bool] = None,
+        prefix_index: Optional[PrefixShareIndex] = None,
     ):
         self.device = (make_device(device, sanitize=sanitize)
                        if isinstance(device, str) else device)
@@ -139,6 +250,13 @@ class KVPagePool:
         self.policy = policy
         self.key_prefix = key_prefix        # stream namespace on a shared device
         self.degrade_ladder = tuple(degrade_ladder)
+        if prefix_index is not None and prefix_index.device is not self.device:
+            raise ValueError(
+                "prefix_index must be built on this pool's device — shared "
+                "pages are acquired from the device the index registers "
+                "them on"
+            )
+        self.prefix_index = prefix_index
         self._pages: List[_Page] = []
         self._commit_clock = 0              # commit boundaries seen (page LRU)
         self._hbm_used = 0
@@ -177,19 +295,34 @@ class KVPagePool:
 
     def append_pages(self, pages: Sequence[tuple]):
         """Commit a batch of pages — ``(layer, kind, start, tokens_u16,
-        importance)`` each — with ONE eviction pass at the end.
+        importance)`` each, with an optional sixth ``share_hash`` element
+        (see :func:`prefix_chain_hashes`) — with ONE eviction pass at the
+        end.
 
         A commit boundary admits every layer's K and V windows at once;
         batching them turns the resulting spill into one write batch, which
         the device encodes as a single vectorized slab (pack + codec a few
         passes for the whole group) instead of per-page pipelines.
+
+        Share-tagged pages take the content-addressed ``shared.`` key
+        instead of this pool's private namespace; residency and eviction
+        behave exactly as for private pages (so solo-run differentials
+        hold), but the spill write is elided when an identical page is
+        already stored — the pool acquires a ledger reference instead.
         """
         self._commit_clock += 1
-        for layer, kind, start, tokens_u16, importance in pages:
-            key = f"{self.key_prefix}L{layer}.{kind}.{start}"
+        for entry in pages:
+            layer, kind, start, tokens_u16, importance = entry[:5]
+            share_hash = entry[5] if len(entry) > 5 else None
+            if share_hash is not None and self.prefix_index is not None:
+                key = shared_page_key(share_hash, layer, kind)
+            else:
+                share_hash = None
+                key = f"{self.key_prefix}L{layer}.{kind}.{start}"
             page = _Page(key, layer, kind, start, tokens_u16.shape[0],
                          importance=importance,
-                         commit_seq=self._commit_clock)
+                         commit_seq=self._commit_clock,
+                         share_hash=share_hash)
             # Always admit to HBM first, then evict the least-important
             # pages (possibly this one) — importance, not arrival order,
             # decides residency (paper §II-C: importance is long-tailed).
@@ -207,19 +340,33 @@ class KVPagePool:
             key=lambda p: p.importance,
         )
         writes = []
+        fresh_shared: List[_Page] = []
         for p in resident:
             if self._hbm_used <= self.hbm_budget:
                 break
             tok = p.resident
             self._hbm_used -= tok.size * 2
-            writes.append(WriteReq(p.key, tok, kind=KV, flush=True, tag=p.key))
             p.resident = None
             self.spill_events.append(p)
+            if p.share_hash is not None and self.prefix_index is not None:
+                if self.prefix_index.acquire(
+                        p.share_hash, p.layer, p.kind) is not None:
+                    # Identical page already stored by another referer:
+                    # take a ledger reference, skip the spill write.
+                    p.shared_ref = True
+                    continue
+                fresh_shared.append(p)
+            writes.append(WriteReq(p.key, tok, kind=KV, flush=True, tag=p.key))
         if writes:
             # Post through the async front-end: spill writes commit eagerly
             # either way, but submit_async leaves queued readback/prefetch
             # tickets in flight instead of forcing them to drain.
             self._account([t.wait() for t in self.device.submit_async(writes)])
+        for p in fresh_shared:
+            # First writer of this prefix window: the commit's initial
+            # reference is this pool's claim; index it for later arrivals.
+            self.prefix_index.register(p.share_hash, p.layer, p.kind, p.key)
+            p.shared_ref = True
 
     def update_importance(self, scores: Dict[str, float]):
         for p in self._pages:
@@ -387,6 +534,16 @@ class KVPagePool:
         cannot shed planes — word layouts).  HBM-resident pages are
         untouched: they occupy HBM, not device capacity, and keep their
         exact values.
+
+        Shared pages never degrade in place: truncating a co-owned page
+        would change what every other referer decodes, and even a
+        sole-referer page keeps its content-addressed key — a later
+        request re-writing that "fresh" window would append to the
+        degraded stream.  The ladder walks private pages only; shared
+        pages free whole at the last referer's retirement.  Any prefetch
+        ticket issued against a page before its truncation is settled
+        and discarded: its data predates the degrade, and serving it
+        would break the degraded-decode differential.
         """
         ladder = (self.degrade_ladder if ladder is None else tuple(ladder))
         if target_bytes <= 0 or not ladder:
@@ -402,11 +559,20 @@ class KVPagePool:
                     return freed
                 if page.degrade_level >= level:
                     continue
+                if page.shared_ref:
+                    continue
                 try:
                     freed += self.device.truncate_planes([page.key], view)
                 except NotImplementedError:
                     return freed        # word layout: nothing to shed
                 page.degrade_level = level
+                # truncate_planes drained the queue, so a prefetch issued
+                # earlier has executed against the PRE-truncation planes;
+                # account it, then drop it so read_layer re-reads the
+                # degraded state instead of serving stale full precision.
+                pf = self._prefetched.pop(page.key, None)
+                if pf is not None:
+                    self._settle_prefetch(pf)
         return freed
 
     # -- teardown ---------------------------------------------------------------
@@ -428,17 +594,27 @@ class KVPagePool:
         prefixes (the scheduler namespaces per request: ``r{id}.``); with
         an EMPTY ``key_prefix`` only this pool's own page keys are
         deleted, never the rest of a shared device.
+
+        Shared pages release their ledger reference instead: the stored
+        copy survives as long as any other request still refers to it,
+        and frees with the last retirement.
         """
         for entry in self._prefetched.values():
             self._settle_prefetch(entry)
         self._prefetched.clear()
+        freed = 0
+        for p in self._pages:
+            if p.shared_ref:
+                self.prefix_index.release(p.key)
+                p.shared_ref = False
+                freed += 1
         if self.key_prefix:
-            freed = self.device.delete_prefix(self.key_prefix)
+            freed += self.device.delete_prefix(self.key_prefix)
         else:
-            keys = {p.key for p in self._pages}
+            keys = {p.key for p in self._pages if not p.share_hash}
             for k in keys:
                 self.device.delete(k)
-            freed = len(keys)
+            freed += len(keys)
         self._pages.clear()
         self.spill_events.clear()
         self._hbm_used = 0
@@ -451,9 +627,20 @@ class KVPagePool:
 
     @property
     def device_resident_bytes(self) -> int:
-        """Physical bytes this pool's namespace occupies on the device
-        right now (stored payload + index, from the residency ledger)."""
+        """Physical bytes this pool's private namespace occupies on the
+        device right now (stored payload + index, from the residency
+        ledger).  Shared pages live under the device-wide ``shared.``
+        namespace and are reported by :attr:`shared_resident_bytes`."""
         return self.device.resident_bytes(self.key_prefix)
+
+    @property
+    def shared_resident_bytes(self) -> int:
+        """Physical bytes of the shared pages this pool holds references
+        on.  Summed per *key*, so two pools referencing one stored copy
+        each report its full size — use the device-wide
+        ``resident_bytes("shared.")`` for the deduplicated total."""
+        return sum(self.device.resident_bytes(p.key)
+                   for p in self._pages if p.shared_ref)
 
     @property
     def physical_kv_bytes(self) -> int:

@@ -63,7 +63,10 @@ from ..configs.base import ArchConfig
 from ..core.system_model import SystemSpec
 from ..core.tier import Ticket, TierStore, make_device
 from ..models import decode_step, forward, init_cache
-from .paging import KVPagePool, PagePolicy, PAPER_POLICY, _Page
+from .paging import (
+    KVPagePool, PagePolicy, PAPER_POLICY, PrefixShareIndex, _Page,
+    prefix_chain_hashes,
+)
 
 # One jitted step per distinct (frozen, hashable) ArchConfig, shared by
 # every engine — N streams of the same model trace and compile once, not
@@ -119,6 +122,7 @@ class ServeEngine:
         key_prefix: str = "",
         async_io: bool = True,
         sanitize: Optional[bool] = None,
+        prefix_index: Optional[PrefixShareIndex] = None,
     ):
         assert not cfg.is_encoder_only, "serving needs a decoder"
         self.cfg = cfg
@@ -130,9 +134,15 @@ class ServeEngine:
         self.pool = KVPagePool(
             device_kind, page_tokens, hbm_kv_budget, policy,
             key_prefix=key_prefix, sanitize=sanitize,
+            prefix_index=prefix_index,
         )
         self.cache = init_cache(cfg, batch, max_seq)
         self.pos = 0
+        # Prompt-prefix chain hashes (share-tagging completed prompt
+        # windows); filled by the first prefill when the pool is wired to
+        # a PrefixShareIndex, empty otherwise.
+        self._share_hashes: List[str] = []
+        self._prompt_len = 0
         self._inflight: List[Tuple[_Page, Ticket]] = []
         self._decode = lambda p, b, c: _jit_step(cfg, p, b, c)
         self._prefill = self._decode
@@ -158,6 +168,15 @@ class ServeEngine:
             for kind in kv_keys:
                 buf = np.asarray(layers[kind])  # (L, B, S, ...) bf16
                 n_layers = buf.shape[0]
+                # Windows fully inside the prompt carry their prefix
+                # chain hash: identical prompt prefixes produce identical
+                # KV there (causal attention), so these pages are the
+                # shareable ones.  Windows touching generated tokens stay
+                # private — that is the copy-on-write divergence point.
+                share = None
+                if (self._share_hashes
+                        and start + self.page_tokens <= self._prompt_len):
+                    share = self._share_hashes[start // self.page_tokens]
                 for layer in range(n_layers):
                     page = buf[layer, :, start : start + self.page_tokens]
                     tok = page.reshape(self.page_tokens * self.batch, -1)
@@ -165,7 +184,7 @@ class ServeEngine:
                     # recency as default importance; attention-mass updates
                     # arrive via pool.update_importance
                     batch_pages.append(
-                        (layer, kind, start, u16, float(start))
+                        (layer, kind, start, u16, float(start), share)
                     )
         if batch_pages:
             self.pool.append_pages(batch_pages)
@@ -237,6 +256,9 @@ class ServeEngine:
         logits, self.cache = self._prefill(self.params, batch, self.cache)
         old = self.pos
         self.pos += S
+        if old == 0 and self.pool.prefix_index is not None:
+            self._share_hashes = prefix_chain_hashes(tokens, self.page_tokens)
+            self._prompt_len = S
         self._commit_pages(old, self.pos)
         return np.asarray(logits[:, -1])
 
@@ -417,6 +439,8 @@ class RequestRecord:
     req_id: int
     arrival: float
     kv_projected_bytes: int = 0
+    kv_novel_bytes: int = -1    # admission charge after the shared-prefix
+                                # discount (-1 until computed at admission)
     admit_step: int = -1
     first_token_step: int = -1
     finish_step: int = -1
@@ -430,6 +454,15 @@ class RequestRecord:
     @property
     def finished(self) -> bool:
         return self.tokens is not None
+
+    @property
+    def kv_charged_bytes(self) -> int:
+        """What admission actually charged against ``kv_capacity_bytes``:
+        the novel-KV projection when prefix sharing discounted already-
+        resident prompt windows, else the full projection.  Retirement
+        returns exactly this amount."""
+        return (self.kv_novel_bytes if self.kv_novel_bytes >= 0
+                else self.kv_projected_bytes)
 
     @property
     def queue_delay_s(self) -> float:
@@ -459,20 +492,31 @@ class RequestRecord:
                 / (self.tokens.shape[1] - 1))
 
 
-@functools.lru_cache(maxsize=None)
-def _kv_bytes_per_token(cfg: ArchConfig, batch: int) -> int:
-    """Paged-KV bytes one committed token contributes, from the cache
-    spec (``jax.eval_shape`` — traced once per (cfg, batch), no
-    allocation)."""
-    spec = jax.eval_shape(lambda: init_cache(cfg, batch, 8))
+@functools.lru_cache(maxsize=32)
+def _kv_bytes_per_token_b1(cfg: ArchConfig) -> int:
+    """Batch-1 paged-KV bytes one committed token contributes, from the
+    cache spec (``jax.eval_shape`` — no allocation).  Bounded: one entry
+    per architecture, never per batch size."""
+    spec = jax.eval_shape(lambda: init_cache(cfg, 1, 8))
     layers = spec.get("layers", {})
     total = 0
     for kind in ("k", "v", "c_kv"):
         if kind in layers:
-            shape = layers[kind].shape          # (L, B, S, ...channels)
+            shape = layers[kind].shape          # (L, 1, S, ...channels)
             per_token = int(np.prod(shape[3:])) if len(shape) > 3 else 1
-            total += int(shape[0]) * batch * per_token * 2
+            total += int(shape[0]) * per_token * 2
     return total
+
+
+def _kv_bytes_per_token(cfg: ArchConfig, batch: int) -> int:
+    """Paged-KV bytes one committed token contributes at ``batch``.
+
+    The per-token increment is exactly linear in batch (every KV leaf is
+    ``(L, B, S, channels…)``), so only the batch-1 slope is traced and
+    cached — a long-running server that sees many batch sizes re-traces
+    nothing and the cache stays bounded by the number of architectures.
+    """
+    return _kv_bytes_per_token_b1(cfg) * batch
 
 
 def projected_kv_bytes(cfg: ArchConfig, batch: int, total_tokens: int,
@@ -634,6 +678,19 @@ class ServeScheduler:
     bytes are never touched and per-request tokens stay bit-identical
     to solo runs.
 
+    Shared-prefix KV reuse (``prefix_share=True``): every engine's pool
+    is wired to one :class:`PrefixShareIndex`, so identical completed
+    prompt-prefix pages are stored once under the content-addressed
+    ``shared.`` namespace (refcounted in the residency ledger, freed when
+    the last referer retires) and the spill write is elided for every
+    request after the first — and admission charges each request only its
+    *novel* projection (frozen into ``RequestRecord.kv_novel_bytes`` so
+    retirement refunds exactly what was charged).  At high prefix overlap this
+    multiplies the admissible concurrent batch and cuts TTFT twice over:
+    less queue wait and fewer spill bytes per tick.  Sharing preserves
+    the differential guarantee — a reused page stores exactly the bytes
+    the request's own write would have stored.
+
     The differential guarantee extends to dynamic membership: per-key
     program order on the shared queue means each request's decoded tokens
     are bit-identical to running it solo through
@@ -665,6 +722,7 @@ class ServeScheduler:
         async_io: bool = True,
         sys: SystemSpec = SystemSpec(),
         sanitize: Optional[bool] = None,
+        prefix_share: bool = False,
     ):
         from .paging import PAPER_POLICY as _paper
 
@@ -692,6 +750,12 @@ class ServeScheduler:
         self.degrade_ladder = tuple(degrade_ladder or ())
         self.async_io = async_io
         self.sys = sys
+        # Shared-prefix KV reuse: one content-addressed index across every
+        # engine this scheduler starts.  Identical prompt-prefix pages are
+        # stored once (refcounted), and admission charges each request only
+        # its NOVEL projection (see _novel_bytes).
+        self.prefix_index = (PrefixShareIndex(self.device)
+                             if prefix_share else None)
         self._max_seq = max_seq
         self.pending: List[ServeRequest] = []
         self.active: List[Optional[_ActiveSeq]] = [None] * max_batch
@@ -825,12 +889,34 @@ class ServeScheduler:
         return int(np.ceil(logical_bytes
                            / max(self.kv_ratio_estimate, 1e-6)))
 
+    def _novel_bytes(self, req: ServeRequest, rec: RequestRecord) -> int:
+        """The admission charge for one request: its full KV projection
+        minus the leading prompt windows whose shared pages are already
+        stored on the device (``PrefixShareIndex.resident_chain``).
+
+        Computed at each admission attempt — the index changes as other
+        requests prefill and retire — and frozen into the record at
+        admission so retirement returns exactly what was charged.  It is
+        a projection like everything else admission uses: a referenced
+        shared page stays alive while this request runs (the pool
+        acquires it at spill), but a page counted here could free between
+        this check and this request's own spill, in which case the pool
+        simply writes it again — same estimate-then-correct contract as
+        the ratio feedback.
+        """
+        if self.prefix_index is None:
+            return rec.kv_projected_bytes
+        hashes = prefix_chain_hashes(req.prompt, self.page_tokens)
+        hit_windows = self.prefix_index.resident_chain(hashes)
+        shared = hit_windows * self.page_tokens * (self._kv_per_token or 0)
+        return max(rec.kv_projected_bytes - shared, 0)
+
     def _kv_fits(self, rec: RequestRecord) -> bool:
         if self.kv_capacity_bytes is None:
             return True
         if not any(s is not None for s in self.active):
             return True                  # empty-batch escape (no deadlock)
-        need = self.kv_committed_bytes + rec.kv_projected_bytes
+        need = self.kv_committed_bytes + rec.kv_charged_bytes
         return self._projected_physical(need) <= self.kv_capacity_bytes
 
     def _update_ratio(self):
@@ -877,7 +963,7 @@ class ServeScheduler:
         enabling a ladder."""
         if not self.degrade_ladder or self.capacity_model != "physical":
             return False
-        need = self.kv_committed_bytes + rec.kv_projected_bytes
+        need = self.kv_committed_bytes + rec.kv_charged_bytes
         deficit = self._projected_physical(need) - self.kv_capacity_bytes
         freed = 0
         for seq in self.active:
@@ -904,10 +990,11 @@ class ServeScheduler:
         while free and self.pending and self.pending[0].arrival <= self.clock:
             req = self.pending[0]
             rec = self.records[req.req_id]
+            rec.kv_novel_bytes = self._novel_bytes(req, rec)
             if not self._kv_fits(rec) and not self._reclaim_for(rec):
                 break                    # strict FIFO: wait for retirements
             self.pending.pop(0)
-            self.kv_committed_bytes += rec.kv_projected_bytes
+            self.kv_committed_bytes += rec.kv_charged_bytes
             self.active[free.pop(0)] = self._start(req, rec)
 
     def _start(self, req: ServeRequest, rec: RequestRecord) -> _ActiveSeq:
@@ -916,6 +1003,7 @@ class ServeScheduler:
             page_tokens=self.page_tokens, hbm_kv_budget=self.hbm_kv_budget,
             device_kind=self.device, policy=self.policy,
             key_prefix=f"r{req.req_id}.", async_io=self.async_io,
+            prefix_index=self.prefix_index,
         )
         rec.admit_step = self.clock
         rec.t_admit_s = self.model_time_s
@@ -954,7 +1042,7 @@ class ServeScheduler:
             rec.tokens = np.stack(seq.out, axis=1)
             rec.finish_step = self.clock
             rec.t_finish_s = self.model_time_s
-            self.kv_committed_bytes -= rec.kv_projected_bytes
+            self.kv_committed_bytes -= rec.kv_charged_bytes
             self.active[i] = None
 
     # -- introspection -------------------------------------------------------

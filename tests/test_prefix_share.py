@@ -1,0 +1,438 @@
+"""Shared-prefix KV reuse: content-addressed chain hashing, the
+refcounted residency ledger (acquire/release, stored bytes counted
+once, freed at last retirement), copy-on-write divergence, the
+scheduler's novel-KV admission discount, and the regression sweep —
+stale prefetch after reclaim, namespace-prefix collisions, the bounded
+per-token projection cache, and refcount fault injection under the
+sanitizer."""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.precision import MAN0, MAN4
+from repro.core.tier import (
+    KV, ReadReq, SanitizerViolation, WriteReq, make_device,
+)
+from repro.runtime import (
+    ServeEngine, ServeRequest, ServeScheduler, projected_kv_bytes,
+)
+from repro.runtime.paging import (
+    DEFAULT_DEGRADE_LADDER, KVPagePool, LOSSLESS_POLICY, PrefixShareIndex,
+    prefix_chain_hashes, shared_page_key,
+)
+
+
+def _payload(seed=0, shape=(64, 256)):
+    return np.random.default_rng(seed).integers(
+        0, 1 << 16, size=shape, dtype=np.uint16)
+
+
+# ---------------------------------------------------------------------------
+# chain hashing: the copy-on-write divergence rule
+# ---------------------------------------------------------------------------
+
+def test_chain_hashes_window_count_and_determinism():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, (1, 50)).astype(np.int32)
+    hs = prefix_chain_hashes(toks, 16)
+    assert len(hs) == 3                       # 50 // 16 full windows
+    assert hs == prefix_chain_hashes(toks.copy(), 16)
+    assert len(set(hs)) == 3                  # chained, not repeated
+    # the page size seeds the chain: same tokens, different paging,
+    # disjoint hash namespaces
+    assert prefix_chain_hashes(toks, 25)[0] not in hs
+
+
+def test_chain_hashes_diverge_after_first_differing_token():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 1000, (1, 64)).astype(np.int32)
+    b = a.copy()
+    b[0, 20] += 1                             # differs inside window 1
+    ha, hb = prefix_chain_hashes(a, 16), prefix_chain_hashes(b, 16)
+    assert ha[0] == hb[0]                     # window 0 identical
+    assert all(x != y for x, y in zip(ha[1:], hb[1:]))  # chained divergence
+
+
+def test_shared_page_key_namespace():
+    k = shared_page_key("abcd", 3, "v")
+    assert k == "shared.abcd.L3.v"
+    assert k.startswith("shared.")
+
+
+# ---------------------------------------------------------------------------
+# tier-level refcounting: one stored copy, exact bytes at any interleaving
+# ---------------------------------------------------------------------------
+
+def test_acquire_release_counts_stored_bytes_once():
+    dev = make_device("trace", sanitize=True, kv_window=16)
+    dev.submit([WriteReq("shared.h0.L0.k", synth.kv_cache(16, 64, seed=0),
+                         kind=KV)])
+    one_copy = dev.resident_bytes()
+    assert dev.refcount("shared.h0.L0.k") == 1
+    assert dev.acquire("shared.h0.L0.k") == 2
+    assert dev.acquire("shared.h0.L0.k") == 3
+    # co-owners do not multiply the footprint
+    assert dev.resident_bytes() == one_copy
+    # early releases keep the bytes; the last one frees them
+    assert dev.release("shared.h0.L0.k") == 2
+    assert dev.release("shared.h0.L0.k") == 1
+    assert dev.resident_bytes() == one_copy
+    assert dev.release("shared.h0.L0.k") == 0
+    assert dev.resident_bytes() == 0 and dev.stats.blocks == 0
+    assert dev.refcount("shared.h0.L0.k") == 0
+
+
+def test_acquire_unknown_and_double_release_raise():
+    dev = make_device("trace", sanitize=True)
+    with pytest.raises(KeyError):
+        dev.acquire("ghost")
+    dev.submit([WriteReq("k", _payload())])
+    dev.release("k")
+    with pytest.raises(KeyError):
+        dev.release("k")                      # double release is a bug
+
+
+def test_delete_on_shared_key_only_drops_one_reference():
+    dev = make_device("trace", sanitize=True)
+    dev.submit([WriteReq("s", _payload(1))])
+    dev.acquire("s")
+    dev.delete("s")                           # one referer's claim, not the bytes
+    assert dev.refcount("s") == 1
+    np.testing.assert_array_equal(
+        dev.submit([ReadReq("s")])[0].data, _payload(1))
+    dev.delete("s")
+    assert dev.resident_bytes() == 0
+
+
+def test_delete_prefix_spares_shared_survivors():
+    dev = make_device("trace", sanitize=True, kv_window=16)
+    dev.submit([WriteReq("shared.h.L0.k", synth.kv_cache(16, 64, seed=2),
+                         kind=KV),
+                WriteReq("shared.h.L1.k", synth.kv_cache(16, 64, seed=3),
+                         kind=KV)])
+    dev.acquire("shared.h.L0.k")              # co-owned; L1 is sole-owned
+    assert dev.delete_prefix("shared.") == 2
+    assert dev.refcount("shared.h.L0.k") == 1    # survived, one ref dropped
+    assert dev.refcount("shared.h.L1.k") == 0    # freed outright
+    assert dev.resident_bytes() == dev.resident_bytes("shared.h.L0.k") > 0
+    assert dev.delete_prefix("shared.") == 1
+    assert dev.resident_bytes() == 0
+
+
+def test_truncate_refused_on_coowned_and_acquire_refused_on_truncated():
+    dev = make_device("trace", kv_window=16)
+    dev.submit([WriteReq("s.p", synth.kv_cache(16, 64, seed=4), kind=KV)])
+    dev.acquire("s.p")
+    with pytest.raises(ValueError):
+        dev.truncate_planes(["s.p"], MAN4)    # would degrade every referer
+    dev.release("s.p")
+    assert dev.truncate_planes(["s.p"], MAN4) > 0
+    with pytest.raises(ValueError):
+        dev.acquire("s.p")                    # new referer must not decode
+    dev.delete("s.p")                         # degraded data
+
+
+def test_refcount_conservation_random_interleavings():
+    """Property: any interleaving of writes, acquires, releases and
+    deletes keeps the ledger refcounts equal to a host-side model, the
+    resident bytes equal to the stored-block walk (shared keys counted
+    once), and runs clean under the sanitizer's shadow map."""
+    rng = np.random.default_rng(13)
+    dev = make_device("trace", sanitize=True, kv_window=16)
+    refs = {}                                 # host model: key -> count
+    for _ in range(200):
+        op = rng.integers(0, 8)
+        key = f"shared.h{rng.integers(0, 5)}.L0.k"
+        if op < 3:                            # write (idempotent refresh)
+            if key not in refs:
+                dev.submit([WriteReq(key, synth.kv_cache(
+                    16, 64, seed=int(rng.integers(1 << 16))), kind=KV)])
+                refs[key] = 1
+        elif op < 5 and key in refs:          # acquire
+            assert dev.acquire(key) == refs[key] + 1
+            refs[key] += 1
+        elif op < 7 and key in refs:          # release
+            assert dev.release(key) == refs[key] - 1
+            refs[key] -= 1
+            if refs[key] == 0:
+                del refs[key]
+        elif refs:                            # namespace delete
+            dev.delete_prefix("shared.")
+            refs = {k: n - 1 for k, n in refs.items() if n > 1}
+        for k, n in refs.items():
+            assert dev.refcount(k) == n
+        walk = sum(b.stored_bytes + 64 for k in refs
+                   for b in dev._tensors.get(k, ()))
+        assert dev.resident_bytes() == walk
+    for k in sorted(refs):
+        while dev.refcount(k):
+            dev.release(k)
+    assert dev.resident_bytes() == 0 and dev.stats.blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# namespace-prefix matching (the "r1" vs "r10." collision fix)
+# ---------------------------------------------------------------------------
+
+def test_prefix_match_is_namespace_delimited():
+    """12 concurrent request namespaces: an undotted prefix must bind to
+    exactly its own namespace, never to the lexical superstrings that a
+    raw startswith would also match (r1 -> r10, r11, r12)."""
+    dev = make_device("trace", sanitize=True)
+    for i in range(1, 13):
+        dev.submit([WriteReq(f"r{i}.p0", _payload(i))])
+    per_ns = {i: dev.resident_bytes(f"r{i}.") for i in range(1, 13)}
+    assert sum(per_ns.values()) == dev.resident_bytes()
+    # the undotted form means the same namespace, not a lexical prefix
+    assert dev.resident_bytes("r1") == per_ns[1]
+    assert dev.compression_ratio("r1") == dev.compression_ratio("r1.")
+    assert dev.delete_prefix("r1") == 1
+    for i in (10, 11, 12):                    # superstring namespaces intact
+        np.testing.assert_array_equal(
+            dev.submit([ReadReq(f"r{i}.p0")])[0].data, _payload(i))
+    assert dev.delete_prefix("") == 11
+    assert dev.resident_bytes() == 0
+
+
+def test_exact_key_still_matches_itself():
+    dev = make_device("trace")
+    dev.submit([WriteReq("solo", _payload(7))])
+    assert dev.resident_bytes("solo") > 0     # exact key, no namespace dot
+    assert dev.delete_prefix("solo") == 1
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: refcount-conservation fault injection
+# ---------------------------------------------------------------------------
+
+def test_corrupt_refcount_trips_sanitizer():
+    dev = make_device("trace", sanitize=True)
+    dev.submit([WriteReq("k0", _payload(0))])
+    dev.acquire("k0")
+    dev._ledger["k0"].refs = 5                # drifts from the shadow (2)
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit([ReadReq("k0")])
+    assert ei.value.invariant == "refcount-conservation"
+    assert ei.value.key == "k0"
+    assert ei.value.expected == 2 and ei.value.actual == 5
+
+
+def test_nonpositive_refcount_trips_sanitizer():
+    dev = make_device("trace", sanitize=True)
+    dev.submit([WriteReq("k0", _payload(0))])
+    dev._ledger["k0"].refs = 0                # a live entry must be referenced
+    with pytest.raises(SanitizerViolation) as ei:
+        dev.submit([ReadReq("k0")])
+    assert ei.value.invariant == "refcount-conservation"
+
+
+# ---------------------------------------------------------------------------
+# pool-level sharing: spill-time dedup through the index
+# ---------------------------------------------------------------------------
+
+def _kv_pages(n, seed0=40):
+    return [(0, "k", 16 * i, synth.kv_cache(16, 64, seed=seed0 + i),
+             float(i), f"h{i}") for i in range(n)]
+
+
+def test_pools_share_spilled_pages_one_stored_copy():
+    dev = make_device("trace", sanitize=True, kv_window=16)
+    idx = PrefixShareIndex(dev)
+    pools = [KVPagePool(dev, page_tokens=16, hbm_budget_bytes=0,
+                        policy=LOSSLESS_POLICY, key_prefix=f"r{i}.",
+                        prefix_index=idx) for i in range(3)]
+    for pool in pools:
+        pool.append_pages(_kv_pages(2))
+    one_copy = dev.resident_bytes("shared.")
+    assert one_copy > 0 and dev.resident_bytes() == one_copy
+    for i in range(2):
+        assert dev.refcount(shared_page_key(f"h{i}", 0, "k")) == 3
+    # every pool reads back the same bytes as a solo (unshared) pool
+    solo = KVPagePool("trace", page_tokens=16, hbm_budget_bytes=0,
+                      policy=LOSSLESS_POLICY, key_prefix="r0.")
+    solo.append_pages([e[:5] for e in _kv_pages(2)])
+    want = solo.read_layer(0, "k")
+    for pool in pools:
+        np.testing.assert_array_equal(pool.read_layer(0, "k"), want)
+    # releases retire references; the last one frees the bytes
+    pools[0].release()
+    pools[1].release()
+    assert dev.resident_bytes("shared.") == one_copy
+    pools[2].release()
+    assert dev.resident_bytes() == 0 and dev.stats.blocks == 0
+
+
+def test_index_device_mismatch_rejected():
+    idx = PrefixShareIndex(make_device("trace"))
+    with pytest.raises(ValueError):
+        KVPagePool(make_device("trace"), prefix_index=idx)
+
+
+def test_reclaim_never_degrades_shared_pages():
+    """The ladder walks private pages only: a shared page keeps its
+    content-addressed key even with one referer left, so degrading it in
+    place would poison the stream a later identical-prefix request
+    re-writes (and every co-owner's decode).  Shared bytes free whole at
+    the last retirement instead."""
+    dev = make_device("trace", sanitize=True, kv_window=16)
+    idx = PrefixShareIndex(dev)
+    mk = lambda i: KVPagePool(dev, page_tokens=16, hbm_budget_bytes=0,
+                              policy=LOSSLESS_POLICY, key_prefix=f"r{i}.",
+                              degrade_ladder=DEFAULT_DEGRADE_LADDER,
+                              prefix_index=idx)
+    a, b = mk(0), mk(1)
+    a.append_pages(_kv_pages(2))              # shared head windows
+    a.append_pages([(0, "k", 32 + 16 * i,
+                     synth.kv_cache(16, 64, seed=60 + i), 10.0 + i)
+                    for i in range(2)])       # private tail (no hash)
+    b.append_pages(_kv_pages(2))
+    shared_before = dev.resident_bytes("shared.")
+    assert a.reclaim(1 << 30) > 0             # private pages shed planes
+    assert dev.resident_bytes("shared.") == shared_before
+    assert idx.resident_chain(["h0", "h1"]) == 2   # still acquirable
+    b.release()
+    # even as sole referer the shared pages stay pristine
+    assert a.reclaim(1 << 30) == 0            # ladder already exhausted on
+    assert dev.resident_bytes("shared.") == shared_before   # private pages
+    solo = KVPagePool("trace", page_tokens=16, hbm_budget_bytes=0,
+                      policy=LOSSLESS_POLICY, key_prefix="r0.")
+    solo.append_pages([e[:5] for e in _kv_pages(2)])
+    want = solo.read_layer(0, "k")
+    c = mk(2)
+    c.append_pages(_kv_pages(2))              # acquires, does not re-write
+    assert dev.refcount(shared_page_key("h0", 0, "k")) == 2
+    np.testing.assert_array_equal(c.read_layer(0, "k")[:32], want)
+    a.release()
+    c.release()
+    assert dev.resident_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# regression: reclaim must not serve pre-truncation prefetch data
+# ---------------------------------------------------------------------------
+
+def test_read_after_reclaim_reflects_truncation_despite_prefetch():
+    """prefetch_layer -> reclaim -> read_layer: the prefetch executed
+    against full-precision planes; after the coldest page is truncated
+    in place, read_layer must serve the degraded state (what a fresh
+    read returns), not the stale prefetched bytes."""
+    pool = KVPagePool("trace", page_tokens=16, hbm_budget_bytes=0,
+                      policy=LOSSLESS_POLICY, key_prefix="r0.",
+                      degrade_ladder=(MAN0,), sanitize=True)
+    pool.append_pages([e[:5] for e in _kv_pages(3)])
+    full = pool.read_layer(0, "k")
+    assert pool.prefetch_layer(0, "k") == 3
+    freed = pool.reclaim(1)                   # truncates the coldest page
+    assert freed > 0
+    got = pool.read_layer(0, "k")
+    want = np.concatenate([
+        pool.device.submit([ReadReq(p.key, kind=KV)])[0].data
+        for p in sorted(pool._pages, key=lambda p: p.start)
+    ], axis=0)
+    np.testing.assert_array_equal(got, want)
+    assert not np.array_equal(got, full)      # the degrade is visible
+    # surviving prefetches (untruncated pages) were consumed, not leaked
+    assert not pool._prefetched
+    pool.release()
+    assert pool.device.resident_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# projection-slope cache: keyed on cfg only, bounded, linear in batch
+# ---------------------------------------------------------------------------
+
+def test_kv_per_token_linear_in_batch_and_bounded_cache():
+    from repro.runtime.serving import (
+        _kv_bytes_per_token, _kv_bytes_per_token_b1,
+    )
+    from repro.configs import ARCHS, smoke_config
+
+    cfg = smoke_config(ARCHS["qwen2-0.5b"])
+    base = _kv_bytes_per_token(cfg, 1)
+    assert base > 0
+    for b in (2, 3, 8, 1024):                 # exact linearity, no per-batch
+        assert _kv_bytes_per_token(cfg, b) == base * b   # cache entries
+    info = _kv_bytes_per_token_b1.cache_info()
+    assert info.maxsize == 32                 # bounded, not lru_cache(None)
+    assert info.currsize <= 1 + len(ARCHS)
+
+
+# ---------------------------------------------------------------------------
+# model-backed: admission discount + copy-on-write differential
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_pair(smoke_model):
+    return smoke_model("qwen2-0.5b")
+
+
+def _solo(cfg, params, sched, req):
+    return ServeEngine(
+        cfg, params, max_seq=sched._max_seq, batch=1, page_tokens=16,
+        hbm_kv_budget=1 << 12, device_kind="trace", policy=LOSSLESS_POLICY,
+    ).generate(req.prompt, req.max_new_tokens, seed=req.seed)
+
+
+@pytest.mark.slow
+def test_shared_prefix_unblocks_admission(engine_pair):
+    """The tentpole claim at scheduler level: capacity for ~1.5 logical
+    projections serializes identical prompts without sharing, but admits
+    them together when followers are charged only their novel KV — and
+    every request's tokens stay bit-identical to a solo run."""
+    cfg, params = engine_pair
+    proj = projected_kv_bytes(cfg, 1, 32 + 5, 16)
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab, (1, 32)).astype(np.int32)
+    mk = lambda share: ServeScheduler(
+        cfg, params, max_batch=3, device_kind="trace",
+        policy=LOSSLESS_POLICY, page_tokens=16, hbm_kv_budget=1 << 12,
+        kv_capacity_bytes=int(1.5 * proj), prefix_share=share)
+    reqs = lambda: [ServeRequest(req_id=i, arrival=0.0,
+                                 prompt=prompt.copy(), max_new_tokens=5,
+                                 seed=100 + i) for i in range(3)]
+    base = mk(False).run(reqs())
+    assert base.peak_active == 1              # capacity serializes
+    sched = mk(True)
+    rep = sched.run(reqs())
+    assert rep.peak_active >= 2               # followers charged novel only
+    recs = sorted(rep.records, key=lambda r: r.admit_step)
+    assert recs[0].kv_novel_bytes == recs[0].kv_projected_bytes
+    assert any(r.kv_novel_bytes < r.kv_projected_bytes for r in recs[1:])
+    for req, rec in zip(reqs(), rep.records):
+        np.testing.assert_array_equal(_solo(cfg, params, sched, req),
+                                      rec.tokens)
+    assert sched.device.resident_bytes("") == 0
+    assert sched.kv_committed_bytes == 0
+
+
+@pytest.mark.slow
+def test_cow_divergence_bit_identical(engine_pair):
+    """Copy-on-write: prompts share two page windows then diverge; the
+    shared windows are stored once, the divergent tails stay private,
+    and every request decodes bit-identically to its solo run."""
+    cfg, params = engine_pair
+    rng = np.random.default_rng(23)
+    head = rng.integers(0, cfg.vocab, (1, 32)).astype(np.int32)
+    prompts = [np.concatenate(
+        [head, rng.integers(0, cfg.vocab, (1, 16)).astype(np.int32)],
+        axis=1) for _ in range(3)]
+    reqs = [ServeRequest(req_id=i, arrival=0.0, prompt=p, max_new_tokens=4,
+                         seed=300 + i) for i, p in enumerate(prompts)]
+    sched = ServeScheduler(
+        cfg, params, max_batch=3, device_kind="trace",
+        policy=LOSSLESS_POLICY, page_tokens=16, hbm_kv_budget=1 << 12,
+        prefix_share=True)
+    sched.submit(reqs)
+    peak_refs = 0
+    while sched.step():
+        for k, e in sched.device._ledger.items():
+            if k.startswith("shared."):
+                peak_refs = max(peak_refs, e.refs)
+    rep = sched.report()
+    assert peak_refs == 3                     # head windows truly co-owned
+    for req, rec in zip(reqs, rep.records):
+        np.testing.assert_array_equal(_solo(cfg, params, sched, req),
+                                      rec.tokens)
+    assert sched.device.resident_bytes("") == 0
+    assert sched.kv_committed_bytes == 0

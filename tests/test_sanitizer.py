@@ -77,7 +77,7 @@ def test_clean_async_and_truncate():
     freed = dev.truncate_planes(["k0", "k2"], VIEWS["man4"])
     assert freed > 0
     dev.quiesce()
-    dev.delete_prefix("k")
+    dev.delete_prefix("")
     assert dev.stats.blocks == 0
 
 
@@ -85,7 +85,7 @@ def test_reset_traffic_keeps_shadow_in_sync():
     dev = _loaded_device()
     dev.stats.reset_traffic()          # the bench/test idiom must not trip
     dev.submit([ReadReq(key="k0")])
-    dev.delete_prefix("k")
+    dev.delete_prefix("")
 
 
 # ---------------------------------------------------------------------------
@@ -144,9 +144,9 @@ def test_skipped_retirement_cleanup_trips():
     dev = _loaded_device()
     dev._forget = lambda key, evict_index=True: None   # retirement no-op
     with pytest.raises(SanitizerViolation) as ei:
-        dev.delete_prefix("k")
+        dev.delete_prefix("")
     assert ei.value.invariant == "retire-cleanup"
-    assert ei.value.key == "k"
+    assert ei.value.key == ""
     assert "orphaned" in str(ei.value)
 
 

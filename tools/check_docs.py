@@ -138,7 +138,7 @@ def build_symbol_tables():
                     "TRACE_SANITIZE"))
     strings.update(("ledger-stored-equality", "receipt-conservation",
                     "busy-clock-monotonic", "inflight-window-bound",
-                    "retire-cleanup"))
+                    "retire-cleanup", "refcount-conservation"))
     # jax public API the docs reference when describing R6 (not part of
     # repro's surface, but real names all the same)
     strings.update(("pallas_call", "block_until_ready"))
