@@ -25,6 +25,7 @@ MODULES = [
     "fig18_21_dram",
     "table5_ppa",
     "kernels_bench",
+    "decode_microbench",
     "roofline",
 ]
 

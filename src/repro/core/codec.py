@@ -37,9 +37,10 @@ strategies in ``core.tier``) rely on all three.
 
 from __future__ import annotations
 
+import os
 import warnings
 from bisect import bisect_left
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,6 +59,17 @@ _HASH_SIZE = 1 << _HASH_LOG
 _MIN_MATCH = 4
 _MFLIMIT = 12          # match must not start within last 12 bytes
 _LAST_LITERALS = 5     # last 5 bytes are always literals
+
+
+class CorruptPayloadError(ValueError):
+    """A compressed payload failed structural validation during decode.
+
+    Raised by :func:`lz4_decompress` for truncated frames, match offsets
+    pointing before the produced-length frontier, zero offsets, and
+    outputs exceeding the caller's bound — instead of surfacing a raw
+    ``IndexError`` or silently wrapping a bad copy.  Subclasses
+    ``ValueError`` so existing callers that guard broadly keep working.
+    """
 
 
 # ---------------------------------------------------------------------------
@@ -380,22 +392,206 @@ def _lz4_compress_slab(buf: np.ndarray, chunks: Sequence[bytes]) -> List[bytes]:
     return outs
 
 
-def lz4_compress_batch(chunks: Sequence[bytes]) -> List[bytes]:
+_KERNEL_LZ4 = None       # lazy: module, or False when kernels are unavailable
+
+
+def _lz4_kernel():
+    """The ``kernels.lz4`` match engine, or ``None`` (missing runtime).
+
+    The kernel and this module each carry the LZ4 policy constants; a
+    drift would silently break kernel-vs-oracle byte identity, so it is
+    asserted once at first dispatch.
+    """
+    global _KERNEL_LZ4
+    if _KERNEL_LZ4 is None:
+        try:
+            from ..kernels import lz4 as _k
+
+            if (_k.HASH_LOG, _k.MIN_MATCH, _k.MFLIMIT, _k.LAST_LITERALS,
+                    _k.RUN_STRIDE) != (_HASH_LOG, _MIN_MATCH, _MFLIMIT,
+                                       _LAST_LITERALS, _RUN_STRIDE):
+                raise RuntimeError(
+                    "kernels.lz4 match-policy constants diverged from "
+                    "core.codec's scalar reference")
+            _KERNEL_LZ4 = _k
+        except ImportError:  # pragma: no cover - stripped install
+            _KERNEL_LZ4 = False
+    return _KERNEL_LZ4 or None
+
+
+def _scalar_lz4_forced() -> bool:
+    """``TRACE_SCALAR_LZ4=1`` pins the PR 3 fused slab encoder — the
+    parity oracle the kernel path is differential-tested against."""
+    return os.environ.get("TRACE_SCALAR_LZ4", "") not in ("", "0")
+
+
+def lz4_emit_events(buf: np.ndarray, starts: np.ndarray, ends: np.ndarray,
+                    pos: np.ndarray, dist: np.ndarray,
+                    mlen: np.ndarray) -> List[bytes]:
+    """Serialize a match event tensor to LZ4 block payloads — vectorized.
+
+    The event tensor is the kernel/emit interface: three int64 arrays
+    sorted by global ``pos`` (match start), ``dist`` (backwards offset,
+    1..65535) and ``mlen`` (true LCP length ≥ 4), one row per selected
+    match across ALL streams of the slab; stream membership is implied
+    by position.  Gaps between events are literal runs; each stream ends
+    in a literal-only closer sequence (the standard end-of-block rule).
+
+    Instead of walking sequences in python, the serializer builds a
+    per-sequence table (token value, extension-chain lengths, literal
+    source/length, output offset via one cumsum) and scatters token
+    bytes, 255-extension chains, literals and offset words with ragged
+    numpy fills — O(output bytes) C-speed work, no per-match python.
+    Byte-identical to :func:`_lz4_emit` over each stream's events.
+    """
+    S = int(starts.size)
+    E = int(pos.size)
+    sizes = ends - starts
+    sid_e = np.searchsorted(ends, pos, side="right")
+    ec = np.bincount(sid_e, minlength=S) if E else np.zeros(S, np.int64)
+    ecum = np.concatenate(([0], np.cumsum(ec)))
+    mend = pos + mlen
+    # literal anchors: stream start for a stream's first event, previous
+    # match end for the rest; closer rows start at the last match end
+    first = np.ones(E, dtype=bool)
+    first[1:] = sid_e[1:] != sid_e[:-1]
+    anchor = np.empty(E, dtype=np.int64)
+    anchor[first] = starts[sid_e[first]]
+    anchor[~first] = mend[:-1][~first[1:]]
+    fin_anchor = starts.copy()
+    nz = ec > 0
+    fin_anchor[nz] = mend[ecum[1:][nz] - 1]
+
+    # sequence table: per stream, ec rows then one literal-only closer
+    row_start = np.concatenate(([0], np.cumsum(ec + 1)))
+    R = int(row_start[-1])
+    ev_rows = row_start[sid_e] + (np.arange(E) - ecum[sid_e])
+    fin_rows = row_start[:-1] + ec
+    lit = np.empty(R, dtype=np.int64)
+    lsrc = np.empty(R, dtype=np.int64)
+    mr = np.zeros(R, dtype=np.int64)
+    dr = np.zeros(R, dtype=np.int64)
+    lit[ev_rows] = pos - anchor
+    lsrc[ev_rows] = anchor
+    mr[ev_rows] = mlen
+    dr[ev_rows] = dist
+    lit[fin_rows] = ends - fin_anchor
+    lsrc[fin_rows] = fin_anchor
+
+    has_m = mr > 0
+    lit_ext = np.where(lit >= 15, (lit - 15) // 255 + 1, 0)
+    mx = np.where(has_m, mr - _MIN_MATCH, 0)
+    m_ext = np.where(mx >= 15, (mx - 15) // 255 + 1, 0)
+    row_len = 1 + lit_ext + lit + 2 * has_m + m_ext
+    out_off = np.concatenate(([0], np.cumsum(row_len)))
+    out = np.empty(int(out_off[-1]), dtype=np.uint8)
+
+    tok = (np.minimum(lit, 15) << 4) | np.minimum(mx, 15)
+    out[out_off[:-1]] = tok.astype(np.uint8)
+
+    def _ext_chain(rows: np.ndarray, base: np.ndarray, val: np.ndarray,
+                   cnt: np.ndarray) -> None:
+        # 255-extension chain: cnt bytes of 255...255, rem — rem < 255 by
+        # construction of cnt = (val - 15) // 255 + 1
+        tot = int(cnt.sum())
+        gend = np.cumsum(cnt)
+        within = np.arange(tot) - np.repeat(gend - cnt, cnt)
+        vals = np.full(tot, 255, dtype=np.uint8)
+        vals[gend - 1] = (val - 15 - 255 * (cnt - 1)).astype(np.uint8)
+        out[np.repeat(base, cnt) + within] = vals
+
+    er = np.flatnonzero(lit_ext > 0)
+    if er.size:
+        _ext_chain(er, out_off[:-1][er] + 1, lit[er], lit_ext[er])
+    lstart = out_off[:-1] + 1 + lit_ext
+    lr = np.flatnonzero(lit > 0)
+    if lr.size:
+        # int32 ragged indices: the literal copy touches ~every output
+        # byte, so halving index-array traffic is a measurable win
+        cnt = lit[lr]
+        within = np.arange(int(cnt.sum()), dtype=np.int32)
+        within -= np.repeat((np.cumsum(cnt) - cnt).astype(np.int32), cnt)
+        dsti = np.repeat(lstart[lr].astype(np.int32), cnt)
+        dsti += within
+        srci = np.repeat(lsrc[lr].astype(np.int32), cnt)
+        srci += within
+        out[dsti] = buf[srci]
+    mstart = lstart + lit
+    mrows = np.flatnonzero(has_m)
+    if mrows.size:
+        out[mstart[mrows]] = (dr[mrows] & 0xFF).astype(np.uint8)
+        out[mstart[mrows] + 1] = (dr[mrows] >> 8).astype(np.uint8)
+    xr = np.flatnonzero(m_ext > 0)
+    if xr.size:
+        _ext_chain(xr, mstart[xr] + 2, mx[xr], m_ext[xr])
+
+    blob = out.tobytes()
+    so = out_off[row_start]
+    return [blob[so[s]: so[s + 1]] for s in range(S)]
+
+
+def _lz4_slab_streams(slab, buf: np.ndarray, starts: np.ndarray,
+                      ends: np.ndarray,
+                      force: Optional[str] = None) -> List[bytes]:
+    """LZ4-compress the addressed streams of a slab, kernel path first.
+
+    ``slab`` may be a device array (handed straight to the match kernel —
+    no host round trip); ``buf`` is its host uint8 view for the emit.
+    Falls back to the PR 3 fused slab encoder when the kernel package is
+    unavailable or ``TRACE_SCALAR_LZ4=1`` pins the oracle.
+    """
+    kern = None if _scalar_lz4_forced() else _lz4_kernel()
+    if kern is None:
+        chunks = [buf[s:e].tobytes() for s, e in zip(starts, ends)]
+        return _lz4_compress_slab(
+            np.frombuffer(b"".join(chunks), dtype=np.uint8), chunks)
+    starts = np.asarray(starts, dtype=np.int64).ravel()
+    ends = np.asarray(ends, dtype=np.int64).ravel()
+    gapped = bool(starts.size) and (
+        int(starts[0]) != 0 or int(ends[-1]) != buf.size
+        or bool((starts[1:] != ends[:-1]).any()))
+    if gapped and isinstance(slab, np.ndarray):
+        # bypassed streams leave gaps in the slab, and the match
+        # kernel's prep passes scale with every slab byte — compact a
+        # host slab down to the covered ranges (device slabs stay put:
+        # a copy there would cost the round trip this path avoids)
+        sizes = ends - starts
+        buf = np.concatenate([buf[a:b] for a, b in zip(starts, ends)])
+        ends = np.cumsum(sizes)
+        starts = ends - sizes
+        slab = buf
+    pos, dist, mlen = kern.match_events_slab(slab, starts, ends, force=force)
+    return lz4_emit_events(buf, starts, ends, pos, dist, mlen)
+
+
+def lz4_compress_batch(chunks: Sequence[bytes],
+                       force: Optional[str] = None) -> List[bytes]:
     """Compress a batch of blocks in a few vectorized passes.
 
     Byte-identical to mapping :func:`lz4_compress` over ``chunks`` (the
-    differential encode tests assert this), but the word/hash precompute,
-    candidate search, run scan and match-length sweep each run ONCE over
-    the concatenated slab instead of per block — the python-level work
-    left is proportional to the number of emitted matches, not bytes.
+    differential encode tests assert this).  The match scan runs as one
+    array program over the concatenated slab (``kernels.lz4`` — pallas on
+    accelerator backends, vectorized numpy elsewhere) and the token emit
+    is one ragged scatter (:func:`lz4_emit_events`); ``TRACE_SCALAR_LZ4=1``
+    pins the previous fused slab encoder as a parity oracle.
     """
     if not chunks:
         return []
-    slab = b"".join(chunks)
-    return _lz4_compress_slab(np.frombuffer(slab, dtype=np.uint8), chunks)
+    sizes = np.asarray([len(c) for c in chunks], dtype=np.int64)
+    ends = np.cumsum(sizes)
+    starts = ends - sizes
+    buf = np.frombuffer(b"".join(chunks), dtype=np.uint8)
+    return _lz4_slab_streams(buf, buf, starts, ends, force=force)
 
 
 def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
+    """Decode an LZ4 block payload, validating structure as it goes.
+
+    Corrupt frames — truncated extension chains or literal runs, a match
+    offset of zero or pointing before the produced-length frontier, or
+    output exceeding ``max_out`` — raise :class:`CorruptPayloadError`
+    rather than an ``IndexError`` or a silently-wrapped copy.
+    """
     out = bytearray()
     i, n = 0, len(comp)
     while i < n:
@@ -404,20 +600,44 @@ def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
         lit_len = token >> 4
         if lit_len == 15:
             while True:
+                if i >= n:
+                    raise CorruptPayloadError(
+                        "lz4: truncated literal-length extension at byte "
+                        f"{i} of {n}")
                 b = comp[i]
                 i += 1
                 lit_len += b
                 if b != 255:
                     break
+        if i + lit_len > n:
+            raise CorruptPayloadError(
+                f"lz4: literal run of {lit_len} overruns frame "
+                f"({n - i} bytes left)")
         out.extend(comp[i : i + lit_len])
         i += lit_len
+        if max_out is not None and len(out) > max_out:
+            # checked before the last-sequence break: a tail literal run
+            # must not overshoot the caller's bound either
+            raise CorruptPayloadError(
+                f"lz4: decompressed size {len(out)} exceeds bound {max_out}")
         if i >= n:
             break  # last sequence has no match part
+        if i + 2 > n:
+            raise CorruptPayloadError(
+                f"lz4: truncated match offset at byte {i} of {n}")
         offset = comp[i] | (comp[i + 1] << 8)
         i += 2
+        if offset == 0 or offset > len(out):
+            raise CorruptPayloadError(
+                f"lz4: match offset {offset} outside produced frontier "
+                f"({len(out)} bytes)")
         mlen = (token & 0xF) + _MIN_MATCH
         if (token & 0xF) == 15:
             while True:
+                if i >= n:
+                    raise CorruptPayloadError(
+                        "lz4: truncated match-length extension at byte "
+                        f"{i} of {n}")
                 b = comp[i]
                 i += 1
                 mlen += b
@@ -434,7 +654,8 @@ def lz4_decompress(comp: bytes, max_out: int | None = None) -> bytes:
             pattern = bytes(out[start:])
             out += (pattern * (mlen // offset + 1))[:mlen]
         if max_out is not None and len(out) > max_out:
-            raise ValueError("decompressed size exceeds bound")
+            raise CorruptPayloadError(
+                f"lz4: decompressed size {len(out)} exceeds bound {max_out}")
     return bytes(out)
 
 
@@ -608,6 +829,21 @@ def _prescreen_batch(chunks: Sequence[bytes]) -> List[bool]:
     return res
 
 
+def _prescreen_slab(buf: np.ndarray, starts: np.ndarray,
+                    ends: np.ndarray) -> np.ndarray:
+    """:func:`_prescreen_batch` over slab-addressed streams — same-length
+    streams gather into one ``(R, n)`` matrix, no bytes materialized."""
+    sizes = ends - starts
+    res = np.zeros(starts.size, dtype=bool)
+    for n in np.unique(sizes):
+        if n < _PRESCREEN_MIN_LEN:
+            continue
+        idxs = np.flatnonzero(sizes == n)
+        rows = buf[starts[idxs][:, None] + np.arange(int(n))[None, :]]
+        res[idxs] = _prescreen_group(rows)
+    return res
+
+
 def compress_block(data: bytes, codec: str) -> tuple[bytes, int]:
     """Compress one block; fall back to raw storage when incompressible.
 
@@ -654,6 +890,53 @@ def compress_batch(chunks: Sequence[bytes],
         for i, comp in zip(todo, comps):
             if len(comp) >= BYPASS_THRESHOLD * len(chunks[i]):
                 payloads[i] = chunks[i]
+            else:
+                payloads[i], flags[i] = comp, COMPRESSED
+    return payloads, flags
+
+
+def compress_slab(slab, starts: Sequence[int], ends: Sequence[int],
+                  codec: str,
+                  force: Optional[str] = None) -> Tuple[List[bytes], List[int]]:
+    """:func:`compress_batch` over streams addressed INSIDE a flat slab.
+
+    ``slab`` is a flat uint8 buffer — numpy, or a device array straight
+    from ``pack_planes_slab`` (the match kernel then consumes it without
+    a device→host→device round trip; only the emit reads a host view).
+    ``starts[i]:ends[i]`` bounds stream ``i``.  Byte-identical payloads
+    and flags to ``compress_batch([slab[s:e] ...], codec)``, but raw /
+    bypassed payloads are sliced from the slab and LZ4 streams go to the
+    kernel as (start, end) bounds — no per-stream bytes are materialized
+    before the bypass decision.
+    """
+    name = resolve_codec(codec)
+    starts = np.asarray(starts, dtype=np.int64).ravel()
+    ends = np.asarray(ends, dtype=np.int64).ravel()
+    S = int(starts.size)
+    buf = np.asarray(slab, dtype=np.uint8).ravel()
+    payloads: List[bytes] = [b""] * S
+    flags: List[int] = [RAW] * S
+    todo: List[int] = []
+    for i, skip in enumerate(_prescreen_slab(buf, starts, ends)):
+        if skip:
+            payloads[i] = buf[starts[i]: ends[i]].tobytes()
+        else:
+            todo.append(i)
+    if todo:
+        tsel = np.asarray(todo, dtype=np.int64)
+        if name == "lz4":
+            comps = _lz4_slab_streams(slab, buf, starts[tsel], ends[tsel],
+                                      force=force)
+        elif name == "zstd":
+            comps = zstd_compress_batch(
+                [buf[starts[i]: ends[i]].tobytes() for i in todo])
+        else:
+            c, _ = CODECS[name]
+            comps = [c(buf[starts[i]: ends[i]].tobytes()) for i in todo]
+        for i, comp in zip(todo, comps):
+            n = int(ends[i] - starts[i])
+            if len(comp) >= BYPASS_THRESHOLD * n:
+                payloads[i] = buf[starts[i]: ends[i]].tobytes()
             else:
                 payloads[i], flags[i] = comp, COMPRESSED
     return payloads, flags

@@ -830,24 +830,29 @@ class BitplaneLayout(Layout):
         return self._encode_slab(chunks, codec)
 
     def _encode_slab(self, chunks, codec):
-        """One pack + ONE compress_batch for every (plane, block) stream.
+        """One pack + ONE compress_slab for every (plane, block) stream.
 
         Blocks are padded to a byte multiple, so their plane streams
         concatenate cleanly: packing the concatenation and slicing per
-        block is byte-identical to packing each block alone.
+        block is byte-identical to packing each block alone.  The packed
+        plane matrix is handed to the codec as a flat slab with (start,
+        end) stream bounds — no per-stream bytes are materialized, and
+        on accelerator backends the match kernel consumes the packed
+        planes without a device→host→device round trip.
         """
         sizes = [c.size for c in chunks]
         planes = _pack_slab(np.concatenate(chunks) if len(chunks) > 1
                             else chunks[0].ravel())
-        offs = np.cumsum([0] + [n // 8 for n in sizes]).tolist()
+        offs = np.cumsum([0] + [n // 8 for n in sizes])
         nblk = len(chunks)
-        streams: List[bytes] = []
-        for p in range(BF16_BITS):
-            row = planes[p]
-            streams.extend(
-                row[offs[i] : offs[i + 1]].tobytes() for i in range(nblk)
-            )
-        payloads, flags = codecs.compress_batch(streams, codec)
+        n8 = planes.shape[1]
+        base = np.arange(BF16_BITS, dtype=np.int64)[:, None] * n8
+        payloads, flags = codecs.compress_slab(
+            planes.reshape(-1),
+            (base + offs[None, :-1]).ravel(),
+            (base + offs[None, 1:]).ravel(),
+            codec,
+        )
         return [
             ([payloads[p * nblk + i] for p in range(BF16_BITS)],
              [flags[p * nblk + i] for p in range(BF16_BITS)])

@@ -188,6 +188,8 @@ def serve_continuous(
     async_io: bool = True,
     seed: int = 0,
     sanitize: bool | None = None,
+    slo_ttft_s: float | None = None,
+    slo_tpot_s: float | None = None,
 ):
     """Continuous-batching mode: run a synthetic arrival trace through the
     ServeScheduler and report throughput + latency percentiles."""
@@ -207,6 +209,7 @@ def serve_continuous(
         kv_capacity_bytes=kv_capacity_bytes, capacity_model=capacity_model,
         degrade_ladder=degrade_ladder, prefix_share=prefix_share,
         async_io=async_io, sanitize=sanitize,
+        slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
     )
     rep = sched.run(trace)
     d = sched.device_stats()
@@ -222,6 +225,15 @@ def serve_continuous(
     print(f"[serve] TTFT p50 {rep.p50_ttft_s * 1e3:.2f} ms, "
           f"p99 {rep.p99_ttft_s * 1e3:.2f} ms; "
           f"TPOT mean {rep.mean_tpot_s * 1e3:.2f} ms/tok")
+    if slo_ttft_s is not None or slo_tpot_s is not None:
+        targets = []
+        if slo_ttft_s is not None:
+            targets.append(f"TTFT <= {slo_ttft_s * 1e3:g} ms")
+        if slo_tpot_s is not None:
+            targets.append(f"TPOT <= {slo_tpot_s * 1e3:g} ms/tok")
+        print(f"[serve] SLO attainment {rep.slo_attainment * 100:.1f}% "
+              f"({' and '.join(targets)}, "
+              f"{len(rep.records)} finished requests)")
     if capacity_model == "physical":
         print(f"[serve] admission ratio estimate "
               f"{rep.kv_ratio_estimate:.2f}x"
@@ -285,6 +297,15 @@ def main():
                     help="leading prompt tokens shared verbatim by every "
                          "synthetic request (a common system prompt); "
                          "0 = fully independent prompts")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO target in modeled ms; with either SLO "
+                         "flag the continuous-batching report includes "
+                         "the fraction of requests meeting every "
+                         "configured target")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="TPOT SLO target in modeled ms per output token "
+                         "(single-token requests have no inter-token gap "
+                         "and can only miss on TTFT)")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the tier device with the accounting "
                          "sanitizer on: every commit boundary re-checks "
@@ -318,8 +339,15 @@ def main():
             share_prefix_len=args.share_prefix_len,
             async_io=not args.sync_io, lossless_only=args.lossless_only,
             sanitize=args.sanitize or None,
+            slo_ttft_s=(args.slo_ttft_ms / 1e3
+                        if args.slo_ttft_ms is not None else None),
+            slo_tpot_s=(args.slo_tpot_ms / 1e3
+                        if args.slo_tpot_ms is not None else None),
         )
         return
+    if args.slo_ttft_ms is not None or args.slo_tpot_ms is not None:
+        print("[serve] note: --slo-ttft-ms/--slo-tpot-ms apply to "
+              "continuous-batching mode (--num-requests N)")
     if args.prefix_share:
         print("[serve] note: --prefix-share applies to continuous-"
               "batching mode (--num-requests N); single/multi-stream "

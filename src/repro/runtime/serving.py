@@ -581,6 +581,32 @@ class SchedulerReport:
     capacity_model: str = "logical"
     kv_ratio_estimate: float = 1.0
     reclaimed_bytes: int = 0
+    slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of finished requests meeting BOTH configured SLOs
+        (TTFT and TPOT, modeled seconds).  An unset target is vacuously
+        met; a single-token request has no inter-token gap (``tpot_s``
+        is NaN), so only its TTFT can miss — NaN never counts as a
+        violation.  NaN when no SLO is configured or nothing finished.
+        """
+        if self.slo_ttft_s is None and self.slo_tpot_s is None:
+            return float("nan")
+        done = [r for r in self.records if r.finished]
+        if not done:
+            return float("nan")
+        ok = 0
+        for r in done:
+            if (self.slo_ttft_s is not None
+                    and not r.ttft_s <= self.slo_ttft_s):
+                continue
+            if (self.slo_tpot_s is not None and np.isfinite(r.tpot_s)
+                    and not r.tpot_s <= self.slo_tpot_s):
+                continue
+            ok += 1
+        return ok / len(done)
 
     @property
     def tok_s(self) -> float:
@@ -723,6 +749,8 @@ class ServeScheduler:
         sys: SystemSpec = SystemSpec(),
         sanitize: Optional[bool] = None,
         prefix_share: bool = False,
+        slo_ttft_s: Optional[float] = None,
+        slo_tpot_s: Optional[float] = None,
     ):
         from .paging import PAPER_POLICY as _paper
 
@@ -750,6 +778,11 @@ class ServeScheduler:
         self.degrade_ladder = tuple(degrade_ladder or ())
         self.async_io = async_io
         self.sys = sys
+        # SLO targets (modeled seconds) carried into every report; the
+        # scheduler itself never gates on them — attainment is a
+        # reporting statistic, not an admission signal
+        self.slo_ttft_s = slo_ttft_s
+        self.slo_tpot_s = slo_tpot_s
         # Shared-prefix KV reuse: one content-addressed index across every
         # engine this scheduler starts.  Identical prompt-prefix pages are
         # stored once (refcounted), and admission charges each request only
@@ -873,6 +906,8 @@ class ServeScheduler:
             capacity_model=self.capacity_model,
             kv_ratio_estimate=self.kv_ratio_estimate,
             reclaimed_bytes=self.reclaimed_bytes,
+            slo_ttft_s=self.slo_ttft_s,
+            slo_tpot_s=self.slo_tpot_s,
         )
 
     # -- internals -----------------------------------------------------------

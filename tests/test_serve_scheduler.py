@@ -336,3 +336,72 @@ def test_single_token_request_tpot_nan(engine_pair):
     assert np.isnan(r.tpot_s)
     assert r.ttft_s == pytest.approx(r.latency_s)
     assert np.isnan(rep.mean_tpot_s)
+
+
+# ---------------------------------------------------------------------------
+# SLO attainment (fast, no model): NaN-safe report arithmetic
+# ---------------------------------------------------------------------------
+
+def _slo_rec(req_id, ttft, tpot, ntok=4, finished=True):
+    from repro.runtime import RequestRecord
+
+    r = RequestRecord(req_id=req_id, arrival=0.0)
+    r.t_arrive_s = 0.0
+    r.t_first_token_s = ttft
+    r.t_finish_s = ttft + tpot * (ntok - 1)
+    if finished:
+        r.tokens = np.zeros((1, ntok), np.int32)
+    return r
+
+
+def _slo_report(records, **slo):
+    from repro.runtime import SchedulerReport
+
+    return SchedulerReport(records=records, steps=1, model_time_s=1.0,
+                           decode_tokens=1, prefill_tokens=1, **slo)
+
+
+def test_slo_attainment_nan_when_unconfigured_or_empty():
+    recs = [_slo_rec(0, ttft=0.1, tpot=0.01)]
+    assert np.isnan(_slo_report(recs).slo_attainment)
+    assert np.isnan(_slo_report([], slo_ttft_s=1.0).slo_attainment)
+    unfinished = [_slo_rec(0, ttft=0.1, tpot=0.01, finished=False)]
+    assert np.isnan(_slo_report(unfinished, slo_ttft_s=1.0).slo_attainment)
+
+
+def test_slo_attainment_fraction_meeting_both():
+    recs = [
+        _slo_rec(0, ttft=0.10, tpot=0.01),   # meets both
+        _slo_rec(1, ttft=0.90, tpot=0.01),   # misses TTFT
+        _slo_rec(2, ttft=0.10, tpot=0.20),   # misses TPOT
+    ]
+    rep = _slo_report(recs, slo_ttft_s=0.5, slo_tpot_s=0.05)
+    assert rep.slo_attainment == pytest.approx(1 / 3)
+    # an unset target is vacuously met: TTFT-only counts record 2 back in
+    assert _slo_report(recs, slo_ttft_s=0.5).slo_attainment == \
+        pytest.approx(2 / 3)
+
+
+def test_slo_attainment_single_token_tpot_nan_never_violates():
+    """A single-token request has tpot_s == NaN: under a TPOT SLO it can
+    only miss on TTFT (NaN is not a violation), mirroring mean_tpot_s's
+    exclusion semantics."""
+    solo = _slo_rec(0, ttft=0.1, tpot=0.0, ntok=1)
+    assert np.isnan(solo.tpot_s)
+    rep = _slo_report([solo], slo_ttft_s=0.5, slo_tpot_s=1e-9)
+    assert rep.slo_attainment == 1.0
+    assert _slo_report([solo], slo_ttft_s=0.01,
+                       slo_tpot_s=1e-9).slo_attainment == 0.0
+
+
+@pytest.mark.slow
+def test_slo_attainment_end_to_end(engine_pair):
+    """Scheduler plumbs the targets through to the report: generous
+    SLOs attain 1.0, impossible ones attain 0.0, same workload."""
+    cfg, params = engine_pair
+    reqs = _reqs(cfg, 2, arrivals=[0.0, 0.0], new=3)
+    rep = _sched(cfg, params, slo_ttft_s=1e6, slo_tpot_s=1e6).run(reqs)
+    assert rep.slo_attainment == 1.0
+    rep = _sched(cfg, params, slo_ttft_s=0.0).run(
+        _reqs(cfg, 2, arrivals=[0.0, 0.0], new=3))
+    assert rep.slo_attainment == 0.0
