@@ -333,6 +333,106 @@ def _prefix_share_sweep(smoke: bool = False):
              "lower as more prefix pages are already resident")
 
 
+def _shard_sweep(smoke: bool = False):
+    """Aggregate tok/s vs fleet width, plus imbalance sensitivity.
+
+    The same arrival trace is replayed against 1, 2 and 4 tier devices
+    behind the ShardedTierStore front-end (hash-stripe placement).  Per-
+    device KV capacity is held fixed — one device can admit one request
+    — so the fleet both admits a larger concurrent batch AND divides the
+    per-step I/O wall-clock across independent link pipes (the
+    scheduler's straggler model charges the slowest device).  The run
+    asserts the scaling gate (≥1.5x aggregate tok/s at 4 shards vs 1)
+    and that every request's tokens are bit-identical to the
+    single-device run — placement moves bytes, never values.
+
+    Imbalance sensitivity is receipt-driven: the identical page
+    population is read back through a balanced 4-fleet and through one
+    whose shard 0 has 8x-slower pipes; bytes must not change, only the
+    completion time (gated by the straggler's queue).
+    """
+    import jax
+
+    from repro.configs import ARCHS, smoke_config
+    from repro.core.sharding import ShardedTierStore
+    from repro.core.tier import LinkModel
+    from repro.models.model import init_params
+    from repro.runtime import ServeScheduler, projected_kv_bytes
+    from repro.runtime.paging import LOSSLESS_POLICY
+
+    cfg = smoke_config(ARCHS["qwen2-0.5b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_req, new_tok, prompt_len, page = 6, 4, 32, 16
+    proj = projected_kv_bytes(cfg, 1, prompt_len + new_tok, page)
+    cap_per_dev = int(1.1 * proj)   # one device's capacity ≈ one request
+
+    def _requests():
+        rng = np.random.default_rng(31)
+        return [
+            dict(arrival=0.0,
+                 prompt=rng.integers(0, cfg.vocab, (1, prompt_len)).astype(
+                     np.int32),
+                 max_new_tokens=new_tok, seed=700 + i)
+            for i in range(n_req)
+        ]
+
+    reps = {}
+    for n in (1, 2, 4):
+        sched = ServeScheduler(
+            cfg, params, max_batch=4, device_kind="trace",
+            policy=LOSSLESS_POLICY, page_tokens=page, hbm_kv_budget=1 << 12,
+            kv_capacity_bytes=cap_per_dev * n, capacity_model="logical",
+            shards=n, placement="hash-stripe",
+        )
+        rep = sched.run(_requests())
+        reps[n] = rep
+        emit("fig12", f"shard{n}_tok_s", rep.tok_s, "tok/s",
+             f"{n_req} reqs, {n} device(s), per-device capacity fixed")
+        emit("fig12", f"shard{n}_peak_batch", rep.peak_active, "req",
+             f"fleet capacity {n}x one device")
+        d = sched.device_stats()
+        assert d.dram_bytes_stored == 0 and d.blocks == 0, \
+            "retired requests must free their namespaces on every shard"
+        assert sched.device.resident_bytes("") == 0, \
+            "fleet residency ledger must drain after the last retirement"
+    # sharding moves bytes, never values: per-request tokens bit-identical
+    for n in (2, 4):
+        for r1, rn in zip(reps[1].records, reps[n].records):
+            assert np.array_equal(r1.tokens, rn.tokens), \
+                f"shard{n} run diverged from single-device tokens"
+    gain = reps[4].tok_s / reps[1].tok_s
+    emit("fig12", "shard4_tok_s_gain", gain, "x",
+         "aggregate throughput, 4 devices vs 1 (scaling gate >= 1.5x)")
+    assert gain >= 1.5, (reps[4].tok_s, reps[1].tok_s)
+    emit("fig12", "shard4_fleet_skew", reps[4].fleet_skew, "x",
+         "max/mean moved bytes across the 4-device fleet (hash-stripe)")
+
+    # imbalance sensitivity: one 8x-slower shard, receipt-driven
+    tokens, channels, pages = 64, 256, 16
+    fast = LinkModel()
+    slow = LinkModel(ddr_bw=fast.ddr_bw / 8, link_bw=fast.link_bw / 8,
+                     base_s=fast.base_s * 8)
+    done, payloads = {}, {}
+    for tag, models in (("balanced", [fast] * 4),
+                        ("slow1", [slow] + [fast] * 3)):
+        dev = ShardedTierStore(4, kind="trace", kv_window=tokens,
+                               window=64, link_models=models)
+        dev.submit([
+            WriteReq(f"ctx.{i}", synth.kv_cache(tokens, channels,
+                                                seed=800 + i), kind=KV)
+            for i in range(pages)
+        ])
+        dev.quiesce()
+        recs = dev.drain(dev.submit_async(
+            [ReadReq(f"ctx.{i}", kind=KV) for i in range(pages)]))
+        done[tag] = max(r.latency_s for r in recs)
+        payloads[tag] = [r.data.tobytes() for r in recs]
+    assert payloads["balanced"] == payloads["slow1"], \
+        "a slow shard may cost time, never bits"
+    emit("fig12", "shard_slow1_slowdown", done["slow1"] / done["balanced"],
+         "x", "readback completion, one 8x-slower shard vs balanced 4-fleet")
+
+
 def run():
     sys = SystemSpec()
     _measured_step_traffic(sys)
@@ -340,6 +440,7 @@ def run():
     _continuous_batching_sweep()
     _capacity_model_sweep()
     _prefix_share_sweep()
+    _shard_sweep()
 
     # ---- Fig. 12 -------------------------------------------------------------
     m = gpt_oss_120b("mxfp4")
@@ -398,6 +499,7 @@ if __name__ == "__main__":
     if ap.parse_args().smoke:
         _capacity_model_sweep(smoke=True)
         _prefix_share_sweep(smoke=True)
+        _shard_sweep(smoke=True)
     else:
         run()
     from .common import dump_json

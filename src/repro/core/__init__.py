@@ -2,8 +2,9 @@
 codecs, device models, and the paper's analytic system models."""
 
 from . import bitplane, codec, controller, dram_model, kv_transform, precision
-from . import system_model, tier
+from . import sharding, system_model, tier
 from .precision import PrecisionView, FULL, MAN4, MAN2, MAN0, VIEWS
+from .sharding import PLACEMENTS, FleetStats, ShardedTierStore
 from .tier import (
     GCompDevice,
     PlainDevice,
@@ -18,8 +19,9 @@ from .tier import (
 
 __all__ = [
     "bitplane", "codec", "controller", "dram_model", "kv_transform",
-    "precision", "system_model", "tier",
+    "precision", "sharding", "system_model", "tier",
     "PrecisionView", "FULL", "MAN4", "MAN2", "MAN0", "VIEWS",
     "PlainDevice", "GCompDevice", "TraceDevice", "TierStore", "make_device",
     "WriteReq", "ReadReq", "Receipt", "Ticket",
+    "PLACEMENTS", "FleetStats", "ShardedTierStore",
 ]

@@ -1,0 +1,493 @@
+"""Multi-device tier sharding: N :class:`TierStore` instances behind the
+single-device protocol.
+
+One ``TierStore`` models one CXL controller; a production rack has many.
+:class:`ShardedTierStore` fans a request batch out across ``n`` inner
+stores — each with its own :class:`LinkModel` pipes and busy clock — and
+reassembles per-request receipts in order, so every consumer that speaks
+``WriteReq``/``ReadReq`` → ``submit``/``submit_async`` → ``Receipt``
+(`KVPagePool`, `ServeEngine`, `ServeScheduler`) works unchanged.
+
+Routing is a pluggable :class:`Placement` policy (the ``PLACEMENTS``
+registry, mirroring ``LAYOUTS``/``DEVICE_KINDS``):
+
+* ``hash-stripe`` (default) — every key hashes to one home shard, so one
+  request's KV pages stripe across the fleet and cold capacity scales
+  with ``n``.
+* ``namespace`` — keys route by their first ``.``-segment, pinning each
+  engine replica's whole namespace (``r7.*``) to one device: per-request
+  device affinity instead of per-page striping.
+* ``replicate-weights`` — hash-stripe for KV, but ``TENSOR``-kind writes
+  replicate to every shard and tensor reads fan out to the least-busy
+  replica (smallest :attr:`TierStore.busy_backlog_s`).
+
+Two invariants placement must never break, and the differential suite
+holds it to:
+
+1. **Key locality** — a key's whole append stream lives on exactly one
+   home shard (replicas are full copies), so bytes read back are
+   byte-identical to a single-device run, sync or async.
+2. **Pinned ``shared.`` pages** — content-addressed prefix pages route
+   by their ``shared.<hash>`` head, so every layer/kind page of one
+   prefix window colocates and ``acquire``/``release`` refcounts stay
+   device-local (no cross-shard reference bookkeeping).
+
+Receipts carry the serving shard's ``device_id``; per-device
+``DeviceStats`` stay first-class (``per_device_stats``) and aggregate
+into the :class:`FleetStats` view (``.stats``), so skew and stragglers
+are measurable (``fleet_skew``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .precision import FULL, PrecisionView
+from .tier import (
+    DEVICE_KINDS,
+    DeviceStats,
+    KV,
+    LinkModel,
+    ReadReq,
+    Receipt,
+    Request,
+    TENSOR,
+    Ticket,
+    TierStore,
+    WriteReq,
+    _ns_match,
+)
+
+SHARED_NS = "shared."
+
+
+def _stable_hash(token: str) -> int:
+    """Process-stable key hash (crc32) — placement must not depend on
+    ``PYTHONHASHSEED``, or two pools sharing a fleet would disagree on
+    which shard owns a ``shared.`` page."""
+    return zlib.crc32(token.encode("utf-8"))
+
+
+def shard_route_token(key: str) -> Optional[str]:
+    """The pinned routing token for namespace-pinned keys, else None.
+
+    ``shared.<hash>.L3.k`` routes by ``shared.<hash>`` so all of one
+    content hash's layer/kind pages land on the same shard and its
+    refcounts stay device-local.
+    """
+    if key.startswith(SHARED_NS):
+        parts = key.split(".", 2)
+        if len(parts) > 1:
+            return parts[0] + "." + parts[1]
+    return None
+
+
+class Placement:
+    """Where keys live in the fleet.  Subclasses pick the routing token
+    (and optionally replicate writes); the token → shard map is a stable
+    hash so every pool sharing the fleet agrees."""
+
+    name = ""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def _token(self, key: str) -> str:
+        return key
+
+    def owner(self, key: str) -> int:
+        """The home shard of ``key`` — stable for the key's lifetime."""
+        token = shard_route_token(key)
+        if token is None:
+            token = self._token(key)
+        return _stable_hash(token) % self.n
+
+    def replicates(self, req: WriteReq) -> bool:
+        """True when this write lands a full copy on every shard."""
+        return False
+
+
+class HashStripePlacement(Placement):
+    """Stripe every key by a stable full-key hash (cold-KV default)."""
+
+    name = "hash-stripe"
+
+
+class NamespacePlacement(Placement):
+    """Pin each top-level namespace (``r7.*``) to one shard: engine
+    replicas get whole-device affinity instead of per-page striping."""
+
+    name = "namespace"
+
+    def _token(self, key: str) -> str:
+        return key.split(".", 1)[0]
+
+
+class ReplicateWeightsPlacement(HashStripePlacement):
+    """Hash-stripe KV, replicate hot weights: ``TENSOR``-kind writes land
+    on every shard and tensor reads fan out to the least-busy replica."""
+
+    name = "replicate-weights"
+
+    def replicates(self, req: WriteReq) -> bool:
+        return req.kind == TENSOR
+
+
+PLACEMENTS: Dict[str, type] = {
+    p.name: p for p in (
+        HashStripePlacement, NamespacePlacement, ReplicateWeightsPlacement,
+    )
+}
+
+
+def _fleet_sum(field: str):
+    return property(
+        lambda self: sum(getattr(s.stats, field) for s in self._shards))
+
+
+class FleetStats:
+    """Live fleet-wide aggregate over per-shard :class:`DeviceStats`.
+
+    Every ``DeviceStats`` field reads as the sum across shards at access
+    time, so consumers that poll ``device.stats`` (`ServeScheduler`'s IO
+    snapshot, the pools' ratio estimator) see fleet totals without a
+    sync point; ``reset_traffic`` fans out to every shard.  Note the
+    receipts-sum identity holds per shard, not at the fleet view, under
+    ``replicate-weights``: a replicated write returns ONE receipt but
+    lands bytes on every shard (each shard's own ledger and sanitizer
+    still balance).
+    """
+
+    def __init__(self, shards: Sequence[TierStore]):
+        self._shards = list(shards)
+
+    def reset_traffic(self):
+        for s in self._shards:
+            s.stats.reset_traffic()
+
+    @property
+    def bypass_rate(self) -> float:
+        return self.codec_bypass / max(self.codec_blocks, 1)
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bytes_stored / max(self.dram_bytes_stored, 1)
+
+
+for _field in dataclasses.fields(DeviceStats):
+    setattr(FleetStats, _field.name, _fleet_sum(_field.name))
+
+
+class ShardedTierStore:
+    """N inner tier devices behind the single-device request protocol.
+
+    Construction mirrors :func:`make_device`: pass ``kind`` for a named
+    device per shard, ``layout`` for a bare :class:`TierStore` per shard,
+    or ``shard_factory`` (an ``i -> TierStore`` callable that must set
+    ``device_id=i``) for full control — e.g. heterogeneous fleets with a
+    deliberately slow straggler.  ``link_models`` overrides the pipe
+    model per shard.  All remaining keyword args forward to every inner
+    device.
+    """
+
+    name = "sharded"
+
+    def __init__(self, n: int, kind: Optional[str] = None,
+                 layout: Optional[str] = None,
+                 placement: Union[str, Placement, None] = "hash-stripe",
+                 link_models: Optional[Sequence[LinkModel]] = None,
+                 sanitize: Optional[bool] = None,
+                 shard_factory: Optional[Callable[[int], TierStore]] = None,
+                 **device_kw):
+        if n < 1:
+            raise ValueError(f"need at least one shard, got {n}")
+        if link_models is not None and len(link_models) != n:
+            raise ValueError(
+                f"link_models has {len(link_models)} entries for {n} shards")
+        if placement is None:
+            placement = "hash-stripe"
+        self.placement = (PLACEMENTS[placement](n)
+                          if isinstance(placement, str) else placement)
+        shards: List[TierStore] = []
+        for i in range(n):
+            if shard_factory is not None:
+                dev = shard_factory(i)
+                if dev.device_id != i:
+                    raise ValueError(
+                        f"shard_factory({i}) built device_id="
+                        f"{dev.device_id}; receipts could not attribute "
+                        f"traffic — construct with device_id=i")
+            else:
+                kw = dict(device_kw)
+                if link_models is not None:
+                    kw["link_model"] = link_models[i]
+                if sanitize is not None:
+                    kw["sanitize"] = sanitize
+                kw["device_id"] = i
+                if kind is not None:
+                    dev = DEVICE_KINDS[kind](**kw)
+                else:
+                    dev = TierStore(layout=layout or "word", **kw)
+            shards.append(dev)
+        self.shards = shards
+        self.n_shards = n
+        self.stats = FleetStats(shards)
+        self.sanitize = shards[0].sanitize
+        # Keys written under a replicating policy: reads of these may fan
+        # out to any shard, deletes must retire every copy.
+        self._replicated: set = set()
+
+    # -- routing -------------------------------------------------------------
+    def owner(self, key: str) -> int:
+        """Home shard index of ``key`` under the active placement."""
+        return self.placement.owner(key)
+
+    def _read_shard(self, key: str) -> int:
+        if key in self._replicated:
+            return min(range(self.n_shards),
+                       key=lambda i: (self.shards[i].busy_backlog_s, i))
+        return self.placement.owner(key)
+
+    def _partition(self, requests: Sequence[Request]
+                   ) -> Tuple[List[List[Request]], List[List[Optional[int]]]]:
+        """Split a batch into per-shard sub-batches (relative order kept).
+
+        ``slots[s][j]`` is the batch index the j-th request of shard s
+        answers, or None for a replica copy whose receipt is dropped
+        (its traffic still lands in that shard's stats).
+        """
+        per: List[List[Request]] = [[] for _ in range(self.n_shards)]
+        slots: List[List[Optional[int]]] = [[] for _ in range(self.n_shards)]
+        for idx, req in enumerate(requests):
+            if isinstance(req, WriteReq):
+                home = self.placement.owner(req.key)
+                if self.placement.replicates(req):
+                    self._replicated.add(req.key)
+                    targets = range(self.n_shards)
+                else:
+                    targets = (home,)
+                for s in targets:
+                    per[s].append(req)
+                    slots[s].append(idx if s == home else None)
+            else:
+                key = getattr(req, "key", "")
+                s = self._read_shard(key)
+                per[s].append(req)
+                slots[s].append(idx)
+        return per, slots
+
+    # -- batched entry points ------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> List[Receipt]:
+        """Execute a batch across the fleet; one receipt per request, in
+        order, each stamped with the ``device_id`` that served it.
+        Every shard's sub-batch pre-flights :meth:`TierStore.validate`
+        first, so a malformed batch rejects before ANY shard commits —
+        the same atomicity one device gives."""
+        per, slots = self._partition(requests)
+        for shard, sub in zip(self.shards, per):
+            if sub:
+                shard.validate(sub)
+        receipts: List[Optional[Receipt]] = [None] * len(requests)
+        for shard, sub, sl in zip(self.shards, per, slots):
+            if not sub:
+                continue
+            for i, rec in zip(sl, shard.submit(sub)):
+                if i is not None:
+                    receipts[i] = rec
+        return receipts  # type: ignore[return-value]
+
+    def submit_async(self, requests: Sequence[Request]) -> List[Ticket]:
+        """Enqueue a batch across the fleet; one ticket per request, in
+        order.  Tickets are the inner shards' own (they know their
+        store), so ``Ticket.wait`` flushes exactly the owning shard's
+        queue prefix.  Replica-copy write tickets are born complete and
+        dropped — their receipts are accounted on their shard."""
+        per, slots = self._partition(requests)
+        for shard, sub in zip(self.shards, per):
+            if sub:
+                shard.validate(sub)
+        tickets: List[Optional[Ticket]] = [None] * len(requests)
+        for shard, sub, sl in zip(self.shards, per, slots):
+            if not sub:
+                continue
+            for i, t in zip(sl, shard.submit_async(sub)):
+                if i is not None:
+                    tickets[i] = t
+                else:
+                    # replica-copy write: born complete on its shard —
+                    # collect the receipt now, it has no caller-facing slot
+                    t.wait()
+        return tickets  # type: ignore[return-value]
+
+    @property
+    def pending(self) -> int:
+        """Queued (not yet executed) reads across every shard's window."""
+        return sum(s.pending for s in self.shards)
+
+    def drain(self, tickets: Optional[Sequence[Ticket]] = None
+              ) -> List[Receipt]:
+        """Flush every shard's queue; with ``tickets``, return exactly
+        those receipts in order (single-device :meth:`TierStore.drain`
+        semantics, fleet-wide)."""
+        if tickets is None:
+            out: List[Receipt] = []
+            for shard in self.shards:
+                out.extend(shard.drain())
+            return out
+        for shard in self.shards:
+            shard.drain()
+        return [t.wait() for t in tickets]
+
+    def quiesce(self):
+        """Idle the host until every shard's pipes drain."""
+        for shard in self.shards:
+            shard.quiesce()
+
+    # -- single-device attribute surface -------------------------------------
+    @property
+    def kv_window(self) -> int:
+        return self.shards[0].kv_window
+
+    @kv_window.setter
+    def kv_window(self, tokens: int):
+        for shard in self.shards:
+            shard.kv_window = tokens
+
+    @property
+    def layout(self):
+        return self.shards[0].layout
+
+    @property
+    def link_model(self) -> LinkModel:
+        return self.shards[0].link_model
+
+    @property
+    def window(self) -> int:
+        return self.shards[0].window
+
+    @property
+    def busy_backlog_s(self) -> float:
+        """The fleet straggler: the largest per-shard pipe backlog."""
+        return max(s.busy_backlog_s for s in self.shards)
+
+    # -- per-key introspection (routed to the home shard) ---------------------
+    def n_blocks(self, key: str) -> int:
+        return self.shards[self.owner(key)].n_blocks(key)
+
+    def footprint(self, key: str) -> int:
+        return self.shards[self.owner(key)].footprint(key)
+
+    def logical_bytes(self, key: str) -> int:
+        return self.shards[self.owner(key)].logical_bytes(key)
+
+    # -- fleet residency ledger ----------------------------------------------
+    def resident_bytes(self, prefix: str = "") -> int:
+        """Physical bytes the namespace occupies across the whole fleet.
+        Replicated weights count once per copy — that is real DRAM."""
+        return sum(s.resident_bytes(prefix) for s in self.shards)
+
+    def compression_ratio(self, prefix: str = "") -> float:
+        raw = phys = 0.0
+        for s in self.shards:
+            p = s.resident_bytes(prefix)
+            if p > 0:
+                raw += s.compression_ratio(prefix) * p
+                phys += p
+        return raw / phys if phys > 0 else 1.0
+
+    def truncate_planes(self, keys: Sequence[str],
+                        view: PrecisionView) -> int:
+        """In-place plane truncation, routed to each key's home shard
+        (every copy, for replicated keys).  Refcounts pre-check across
+        the fleet first so a co-owned page rejects before any shard
+        sheds bytes."""
+        if not self.layout.plane_aligned:
+            raise NotImplementedError(
+                f"layout {self.layout.name!r} stores word-major "
+                "containers; in-place plane truncation needs a "
+                "plane-aligned layout"
+            )
+        for key in keys:
+            refs = self.refcount(key)
+            if refs > 1:
+                raise ValueError(
+                    f"cannot truncate {key!r}: {refs} references "
+                    "hold this shared page"
+                )
+        grouped: Dict[int, List[str]] = {}
+        for key in keys:
+            targets = (range(self.n_shards) if key in self._replicated
+                       else (self.owner(key),))
+            for s in targets:
+                grouped.setdefault(s, []).append(key)
+        reclaimed = 0
+        for s, sub in grouped.items():
+            reclaimed += self.shards[s].truncate_planes(sub, view)
+        return reclaimed
+
+    # -- refcounted shared pages (device-local on the home shard) -------------
+    def refcount(self, key: str) -> int:
+        return self.shards[self.owner(key)].refcount(key)
+
+    def acquire(self, key: str) -> int:
+        return self.shards[self.owner(key)].acquire(key)
+
+    def release(self, key: str) -> int:
+        return self.shards[self.owner(key)].release(key)
+
+    def delete(self, key: str):
+        if key in self._replicated:
+            for shard in self.shards:
+                shard.delete(key)
+            self._replicated.discard(key)
+        else:
+            self.shards[self.owner(key)].delete(key)
+
+    def delete_prefix(self, prefix: str) -> int:
+        """Release one namespace fleet-wide.  Under hash-stripe a
+        namespace spans shards, so the delete fans out and the key count
+        sums; a pinned ``shared.<hash>`` namespace lives on one shard
+        only, so co-owned refcounts decrement exactly once, there."""
+        released = 0
+        for shard in self.shards:
+            released += shard.delete_prefix(prefix)
+        self._replicated = {k for k in self._replicated
+                            if not _ns_match(k, prefix)}
+        return released
+
+    # -- fleet view -----------------------------------------------------------
+    def per_device_stats(self) -> List[DeviceStats]:
+        """Each shard's own :class:`DeviceStats`, indexed by device_id."""
+        return [s.stats for s in self.shards]
+
+    def fleet_skew(self) -> float:
+        """Load imbalance: max over mean of per-shard moved bytes (DRAM +
+        link traffic).  1.0 is a perfectly balanced fleet; large values
+        flag stragglers/hot shards.  1.0 when nothing moved yet."""
+        moved = [s.stats.dram_bytes_read + s.stats.dram_bytes_written
+                 + s.stats.link_bytes_in + s.stats.link_bytes_out
+                 for s in self.shards]
+        total = sum(moved)
+        if total <= 0:
+            return 1.0
+        return max(moved) * self.n_shards / total
+
+    # -- legacy shims (deprecated; forward to submit) ------------------------
+    def write_tensor(self, name: str, u16: np.ndarray):
+        self.submit([WriteReq(name, u16, kind=TENSOR)])
+
+    def read_tensor(self, name: str, view: PrecisionView = FULL) -> np.ndarray:
+        return self.submit([ReadReq(name, kind=TENSOR, view=view)])[0].data
+
+    def write_kv(self, stream: str, tokens_u16: np.ndarray):
+        self.submit([WriteReq(stream, tokens_u16, kind=KV, flush=False)])
+
+    def read_kv(self, stream: str, view: PrecisionView = FULL) -> np.ndarray:
+        return self.submit([ReadReq(stream, kind=KV, view=view)])[0].data
+
+    def flush_kv(self, stream: str):
+        self.shards[self.owner(stream)].flush_kv(stream)

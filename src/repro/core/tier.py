@@ -222,6 +222,7 @@ class Receipt:
     latency_s: float = 0.0        # delivery time: queue_delay_s + service
     queue_delay_s: float = 0.0    # wait behind earlier in-flight requests
     service_s: float = 0.0        # serialized service time (sync latency)
+    device_id: int = 0            # which device in a fleet served this
     data: Optional[np.ndarray] = None
 
     @property
@@ -1046,12 +1047,13 @@ class TierStore:
                  index_cache_entries: int = 4096, kv_window: int = 64,
                  link_model: LinkModel = LinkModel(), window: int = 64,
                  batched_encode: bool = True,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None, device_id: int = 0):
         self.layout = LAYOUTS[layout]() if isinstance(layout, str) else layout
         self.codec = codecs.resolve_codec(codec)
         self.block_elems = block_elems
         self.kv_window = kv_window
         self.link_model = link_model
+        self.device_id = device_id           # fleet position (receipts carry it)
         self.window = window                 # max queued (in-flight) reads
         self.batched_encode = batched_encode  # False: scalar reference path
         # Runtime invariant sanitizer: explicit flag wins, else the
@@ -1105,11 +1107,19 @@ class TierStore:
             else:
                 raise TypeError(f"not a tier request: {req!r}")
 
+    def validate(self, requests: Sequence[Request]):
+        """Public batch validation — same checks :meth:`submit` runs before
+        touching device state.  A sharding front-end pre-flights every
+        shard's sub-batch through this so a malformed fleet batch rejects
+        before ANY shard commits (single-device atomicity, fleet-wide)."""
+        self._validate(requests)
+
     # -- sanctioned accounting helpers (lint rule R3) -------------------------
     def _apply_receipt(self, rec: Receipt):
         """Fold one receipt into the running aggregate — the only
         sanctioned path for receipt-driven stats mutation (and the
         point where the sanitizer's shadow aggregate stays in step)."""
+        rec.device_id = self.device_id
         self.stats.apply(rec)
         if self._san is not None:
             self._san.shadow.apply(rec)
@@ -1294,6 +1304,15 @@ class TierStore:
             # host blocked until the last delivery; pipes are drained past
             # this point, so backlogs collapse to zero for the next group
             self._now_s = now + times[-1][1]
+
+    @property
+    def busy_backlog_s(self) -> float:
+        """Residual pipe occupancy beyond host `now` (seconds) — how far
+        this device's DDR/link frontiers run ahead of the host clock.
+        Zero on an idle device.  The sanctioned readout fleet placement
+        uses to fan replicated reads out to the least-busy replica."""
+        return max(self._ddr_free_s - self._now_s,
+                   self._link_free_s - self._now_s, 0.0)
 
     def quiesce(self):
         """Idle the host until both device pipes drain.
@@ -1895,5 +1914,24 @@ BaseDevice = TierStore
 DEVICE_KINDS = {"plain": PlainDevice, "gcomp": GCompDevice, "trace": TraceDevice}
 
 
-def make_device(kind: str, **kw) -> TierStore:
+def make_device(kind: str, shards: Optional[int] = None,
+                placement: Optional[str] = None, **kw) -> TierStore:
+    """Build a named device — or a fleet of them.
+
+    ``shards`` > 1 returns a :class:`repro.core.sharding.ShardedTierStore`
+    over ``shards`` inner devices of this kind (same protocol, so every
+    consumer works unchanged).  ``shards=None`` defers to the
+    ``TRACE_SHARDS`` env var (the sharded CI suite runs the whole fast
+    suite at ``TRACE_SHARDS=4``); pass ``shards=1`` to pin a single
+    device regardless — tests that assert single-queue latency shapes do.
+    ``placement`` names a policy in ``repro.core.sharding.PLACEMENTS``
+    (ignored for a single device).
+    """
+    if shards is None:
+        raw = os.environ.get("TRACE_SHARDS", "").strip()
+        shards = int(raw) if raw else 1
+    if shards > 1:
+        from .sharding import ShardedTierStore
+        return ShardedTierStore(shards, kind=kind,
+                                placement=placement or "hash-stripe", **kw)
     return DEVICE_KINDS[kind](**kw)

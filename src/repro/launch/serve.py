@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from ..configs import ARCHS, smoke_config
-from ..core import synth
+from ..core import make_device, synth
 from ..core.precision import VIEWS
 from ..models.model import init_params
 from ..runtime import (
@@ -81,6 +81,14 @@ serving modes (and the benchmark figure each corresponds to):
                          [--prefix-share]          shared-prefix KV reuse
                          [--share-prefix-len N]
 
+  Every mode accepts --shards N (with --placement P): the tier becomes a
+  ShardedTierStore fleet of N devices, each with its own LinkModel pipes
+  and busy clock.  hash-stripe spreads each request's pages across the
+  fleet, namespace pins whole request namespaces per shard, and
+  replicate-weights copies TENSOR-kind writes to every shard with read
+  fan-out to the least-busy replica.  Receipts carry the serving
+  device_id; the continuous-batching report adds n_devices + fleet_skew.
+
   The physical capacity model admits against the device's residency
   ledger (projection / observed compression ratio) instead of logical
   BF16 bytes — trace devices admit a larger concurrent batch at the
@@ -115,6 +123,8 @@ def serve(
     async_io: bool = True,
     seed: int = 0,
     sanitize: bool | None = None,
+    shards: int | None = None,
+    placement: str | None = None,
 ):
     cfg = ARCHS[arch]
     if smoke:
@@ -130,9 +140,14 @@ def serve(
         async_io=async_io,
         sanitize=sanitize,
     )
+    # Build the (possibly sharded) device up front so the solo-engine
+    # path honors --shards/--placement the same way MultiStreamEngine
+    # does; `device` stays the kind name for reporting.
+    dev = make_device(device, shards=shards, placement=placement,
+                      sanitize=sanitize)
     rng = np.random.default_rng(seed)
     if streams > 1:
-        eng = MultiStreamEngine(cfg, params, streams, device_kind=device, **kw)
+        eng = MultiStreamEngine(cfg, params, streams, device_kind=dev, **kw)
         prompts = [
             rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
             for _ in range(streams)
@@ -150,7 +165,7 @@ def serve(
               f"queue delay {io_qd * 1e3:.3f} ms")
         print(f"[serve] aggregate tok/s ceiling: {eng.throughput_ceiling():.1f}")
         return eng, toks
-    eng = ServeEngine(cfg, params, device_kind=device, **kw)
+    eng = ServeEngine(cfg, params, device_kind=dev, **kw)
     prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     toks = eng.generate(prompt, n_tokens)
     s = eng.stats()
@@ -188,6 +203,8 @@ def serve_continuous(
     async_io: bool = True,
     seed: int = 0,
     sanitize: bool | None = None,
+    shards: int | None = None,
+    placement: str | None = None,
     slo_ttft_s: float | None = None,
     slo_tpot_s: float | None = None,
 ):
@@ -209,6 +226,7 @@ def serve_continuous(
         kv_capacity_bytes=kv_capacity_bytes, capacity_model=capacity_model,
         degrade_ladder=degrade_ladder, prefix_share=prefix_share,
         async_io=async_io, sanitize=sanitize,
+        shards=shards, placement=placement,
         slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
     )
     rep = sched.run(trace)
@@ -245,6 +263,10 @@ def serve_continuous(
         print(f"[serve] prefix share: admission charged {novel} of {proj} "
               f"projected KV bytes ({proj - novel} B already resident as "
               f"shared pages)")
+    if rep.n_devices > 1:
+        print(f"[serve] fleet: {rep.n_devices} devices "
+              f"(placement {placement or 'hash-stripe'}), "
+              f"skew {rep.fleet_skew:.2f}x max/mean moved bytes")
     print(f"[serve] tier after retirement: stored {d.dram_bytes_stored} B, "
           f"{d.blocks} blocks (retired requests freed their namespaces)")
     return sched, rep
@@ -306,6 +328,21 @@ def main():
                     help="TPOT SLO target in modeled ms per output token "
                          "(single-token requests have no inter-token gap "
                          "and can only miss on TTFT)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve against a fleet of N tier devices behind "
+                         "one ShardedTierStore front-end (each with its "
+                         "own link pipes and busy clock); 0 defers to "
+                         "the TRACE_SHARDS env var, 1 pins a single "
+                         "device")
+    ap.add_argument("--placement", default=None,
+                    choices=["hash-stripe", "namespace",
+                             "replicate-weights"],
+                    help="fleet placement policy (with --shards > 1): "
+                         "hash-stripe spreads pages by key hash, "
+                         "namespace pins whole request namespaces per "
+                         "shard, replicate-weights copies TENSOR writes "
+                         "to every shard and fans reads out to the "
+                         "least-busy replica")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the tier device with the accounting "
                          "sanitizer on: every commit boundary re-checks "
@@ -339,6 +376,7 @@ def main():
             share_prefix_len=args.share_prefix_len,
             async_io=not args.sync_io, lossless_only=args.lossless_only,
             sanitize=args.sanitize or None,
+            shards=args.shards or None, placement=args.placement,
             slo_ttft_s=(args.slo_ttft_ms / 1e3
                         if args.slo_ttft_ms is not None else None),
             slo_tpot_s=(args.slo_tpot_ms / 1e3
@@ -356,7 +394,8 @@ def main():
           prompt_len=args.prompt_len, batch=args.batch,
           streams=args.streams, async_io=not args.sync_io,
           lossless_only=args.lossless_only,
-          sanitize=args.sanitize or None)
+          sanitize=args.sanitize or None,
+          shards=args.shards or None, placement=args.placement)
 
 
 if __name__ == "__main__":

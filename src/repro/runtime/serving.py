@@ -357,9 +357,14 @@ class MultiStreamEngine:
         device_kind: Union[str, TierStore] = "trace",
         async_io: bool = True,
         sanitize: Optional[bool] = None,
+        shards: Optional[int] = None,
+        placement: Optional[str] = None,
         **engine_kw,
     ):
-        self.device = (make_device(device_kind, sanitize=sanitize)
+        # shards=None defers to the TRACE_SHARDS env var (make_device);
+        # >1 stripes every stream's pages across a device fleet.
+        self.device = (make_device(device_kind, shards=shards,
+                                   placement=placement, sanitize=sanitize)
                        if isinstance(device_kind, str) else device_kind)
         self.streams = [
             ServeEngine(cfg, params, device_kind=self.device,
@@ -583,6 +588,11 @@ class SchedulerReport:
     reclaimed_bytes: int = 0
     slo_ttft_s: Optional[float] = None
     slo_tpot_s: Optional[float] = None
+    # Fleet view: how many tier devices served the run, and how skewed
+    # the per-device traffic ended up (max/mean moved bytes; 1.0 for a
+    # single device or a perfectly balanced fleet).
+    n_devices: int = 1
+    fleet_skew: float = 1.0
 
     @property
     def slo_attainment(self) -> float:
@@ -751,6 +761,8 @@ class ServeScheduler:
         prefix_share: bool = False,
         slo_ttft_s: Optional[float] = None,
         slo_tpot_s: Optional[float] = None,
+        shards: Optional[int] = None,
+        placement: Optional[str] = None,
     ):
         from .paging import PAPER_POLICY as _paper
 
@@ -766,7 +778,14 @@ class ServeScheduler:
             )
         self.cfg = cfg
         self.params = params
-        self.device = (make_device(device_kind, sanitize=sanitize)
+        # The fleet routing layer: shards > 1 builds a ShardedTierStore,
+        # and because every engine replica this scheduler starts keys its
+        # pages under its own `r{id}.` namespace, the placement policy
+        # spreads the replicas' traffic across the device fleet (hash-
+        # stripe: per-page; namespace: whole replicas pinned per shard).
+        # shards=None defers to the TRACE_SHARDS env var (make_device).
+        self.device = (make_device(device_kind, shards=shards,
+                                   placement=placement, sanitize=sanitize)
                        if isinstance(device_kind, str) else device_kind)
         self.max_batch = max_batch
         self.policy = _paper if policy is None else policy
@@ -908,13 +927,23 @@ class ServeScheduler:
             reclaimed_bytes=self.reclaimed_bytes,
             slo_ttft_s=self.slo_ttft_s,
             slo_tpot_s=self.slo_tpot_s,
+            n_devices=len(self._device_stat_list()),
+            fleet_skew=getattr(self.device, "fleet_skew", lambda: 1.0)(),
         )
 
     # -- internals -----------------------------------------------------------
+    def _device_stat_list(self):
+        """Per-device stats: each entry is one device's own pipes.  A
+        single TierStore is a one-entry fleet; a sharded device exposes
+        ``per_device_stats`` and the tick's I/O time becomes the slowest
+        shard's (the straggler), not the fleet total over one pipe."""
+        per = getattr(self.device, "per_device_stats", None)
+        return per() if per is not None else [self.device.stats]
+
     def _io_snapshot(self):
-        d = self.device.stats
-        return (d.dram_bytes_read + d.dram_bytes_written,
-                d.link_bytes_in + d.link_bytes_out)
+        return [(d.dram_bytes_read + d.dram_bytes_written,
+                 d.link_bytes_in + d.link_bytes_out)
+                for d in self._device_stat_list()]
 
     def _projected_physical(self, logical_bytes: int) -> int:
         """Map a logical-KV projection to the bytes the device is
@@ -1061,10 +1090,18 @@ class ServeScheduler:
                 seq.done = True
 
     def _advance_time(self):
-        dram, link = self._io_snapshot()
-        io_s = max((dram - self._io_mark[0]) / self.sys.cxl_ddr_bw,
-                   (link - self._io_mark[1]) / self.sys.cxl_link_bw)
-        self._io_mark = (dram, link)
+        """One tick costs the compute ceiling or the tick's tier I/O,
+        whichever dominates.  Each device moves its own tick delta over
+        its OWN DDR/link pipes concurrently, so the tick's I/O time is
+        the slowest device's — a balanced fleet divides the I/O wall by
+        ``n`` while one hot shard drags every request with it."""
+        snap = self._io_snapshot()
+        io_s = 0.0
+        for (dram, link), (m_dram, m_link) in zip(snap, self._io_mark):
+            io_s = max(io_s,
+                       (dram - m_dram) / self.sys.cxl_ddr_bw,
+                       (link - m_link) / self.sys.cxl_link_bw)
+        self._io_mark = snap
         self.model_time_s += max(1.0 / self.sys.cap_tok_s, io_s)
 
     def _retire(self):

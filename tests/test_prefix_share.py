@@ -11,6 +11,7 @@ import pytest
 
 from repro.core import synth
 from repro.core.precision import MAN0, MAN4
+from repro.core.sharding import ShardedTierStore
 from repro.core.tier import (
     KV, ReadReq, SanitizerViolation, WriteReq, make_device,
 )
@@ -139,7 +140,8 @@ def test_refcount_conservation_random_interleavings():
     resident bytes equal to the stored-block walk (shared keys counted
     once), and runs clean under the sanitizer's shadow map."""
     rng = np.random.default_rng(13)
-    dev = make_device("trace", sanitize=True, kv_window=16)
+    # shards=1: the stored-block walk below reads one device's _tensors
+    dev = make_device("trace", sanitize=True, kv_window=16, shards=1)
     refs = {}                                 # host model: key -> count
     for _ in range(200):
         op = rng.integers(0, 8)
@@ -203,11 +205,90 @@ def test_exact_key_still_matches_itself():
 
 
 # ---------------------------------------------------------------------------
+# sharding: shared. pages stay device-local (refcounts live on one shard)
+# ---------------------------------------------------------------------------
+
+def test_sharded_shared_pages_colocate_by_content_hash():
+    """Every (layer, kind) page of one content hash routes to the SAME
+    shard — the invariant that keeps a shared chain's refcounts local to
+    one device — while distinct hashes still spread over the fleet."""
+    fleet = ShardedTierStore(4, kind="trace", kv_window=16)
+    chain = [shared_page_key("abcd", layer, kind)
+             for layer in range(4) for kind in ("k", "v")]
+    assert len({fleet.owner(k) for k in chain}) == 1
+    spread = {fleet.owner(shared_page_key(f"h{i:04x}", 0, "k"))
+              for i in range(32)}
+    assert len(spread) > 1
+
+
+def test_sharded_namespace_delete_decrements_owner_shard_only():
+    """Fleet delete_prefix broadcasts to every shard, but a co-owned
+    shared. page must lose exactly ONE reference — on its owning shard —
+    never one per shard, and no ghost entries may appear elsewhere."""
+    fleet = ShardedTierStore(4, kind="trace", kv_window=16, sanitize=True)
+    key = shared_page_key("feed", 0, "k")
+    fleet.submit([WriteReq(key, synth.kv_cache(16, 64, seed=8), kind=KV)])
+    owner = fleet.owner(key)
+    fleet.acquire(key)
+    fleet.acquire(key)                        # 3 references, one copy
+    one_copy = fleet.resident_bytes("")
+    assert fleet.delete_prefix("shared") == 1
+    assert fleet.refcount(key) == 2           # exactly one ref dropped
+    assert fleet.shards[owner].refcount(key) == 2
+    for i, s in enumerate(fleet.shards):
+        if i != owner:
+            assert s.refcount(key) == 0
+            assert s.resident_bytes("shared") == 0
+    assert fleet.resident_bytes("") == one_copy   # bytes still counted once
+    assert fleet.delete_prefix("shared") == 1
+    assert fleet.delete_prefix("shared") == 1     # last referer frees
+    assert fleet.resident_bytes("") == 0
+
+
+def test_sharded_prefix_collision_regression():
+    """The r1-vs-r10 namespace collision, now with the namespaces spread
+    over a fleet: an undotted prefix must bind to its own namespace on
+    every shard it touches, never to lexical superstrings."""
+    fleet = ShardedTierStore(3, kind="trace", sanitize=True)
+    for i in range(1, 13):
+        fleet.submit([WriteReq(f"r{i}.p0", _payload(i))])
+    per_ns = {i: fleet.resident_bytes(f"r{i}.") for i in range(1, 13)}
+    assert sum(per_ns.values()) == fleet.resident_bytes("")
+    assert fleet.resident_bytes("r1") == per_ns[1]
+    assert fleet.delete_prefix("r1") == 1
+    for i in (10, 11, 12):                    # superstring namespaces intact
+        np.testing.assert_array_equal(
+            fleet.submit([ReadReq(f"r{i}.p0")])[0].data, _payload(i))
+    assert fleet.delete_prefix("") == 11
+    assert fleet.resident_bytes("") == 0
+
+
+def test_prefix_share_index_routes_refs_to_owning_shard():
+    """PrefixShareIndex over a sharded device: acquire/release flow
+    through the fleet front-end to the owning shard's ledger, and the
+    last release frees the one stored copy."""
+    fleet = ShardedTierStore(3, kind="trace", kv_window=16, sanitize=True)
+    idx = PrefixShareIndex(fleet)
+    key = shared_page_key("cafe", 2, "v")
+    fleet.submit([WriteReq(key, synth.kv_cache(16, 64, seed=9), kind=KV)])
+    idx.register("cafe", 2, "v", key)
+    owner = fleet.owner(key)
+    assert idx.acquire("cafe", 2, "v") == key
+    assert fleet.shards[owner].refcount(key) == 2
+    assert idx.acquire("missing", 0, "k") is None
+    assert idx.release(key) == 1
+    assert idx.release(key) == 0              # unindexed + freed
+    assert idx.acquire("cafe", 2, "v") is None
+    assert fleet.resident_bytes("") == 0
+    assert all(s.stats.blocks == 0 for s in fleet.shards)
+
+
+# ---------------------------------------------------------------------------
 # sanitizer: refcount-conservation fault injection
 # ---------------------------------------------------------------------------
 
 def test_corrupt_refcount_trips_sanitizer():
-    dev = make_device("trace", sanitize=True)
+    dev = make_device("trace", sanitize=True, shards=1)  # pokes _ledger
     dev.submit([WriteReq("k0", _payload(0))])
     dev.acquire("k0")
     dev._ledger["k0"].refs = 5                # drifts from the shadow (2)
@@ -219,7 +300,7 @@ def test_corrupt_refcount_trips_sanitizer():
 
 
 def test_nonpositive_refcount_trips_sanitizer():
-    dev = make_device("trace", sanitize=True)
+    dev = make_device("trace", sanitize=True, shards=1)  # pokes _ledger
     dev.submit([WriteReq("k0", _payload(0))])
     dev._ledger["k0"].refs = 0                # a live entry must be referenced
     with pytest.raises(SanitizerViolation) as ei:

@@ -15,8 +15,16 @@ from repro.core import synth
 from repro.core.bitplane import BLOCK_ELEMS
 from repro.core.precision import FULL, MAN0, MAN2, MAN4, VIEWS
 from repro.core.tier import (
-    DeviceStats, KV, LinkModel, ReadReq, WriteReq, make_device,
+    DeviceStats, KV, LinkModel, ReadReq, WriteReq,
 )
+from repro.core.tier import make_device as _make_device
+
+
+def make_device(kind, **kw):
+    # This file walks one device's ledger/_tensors internals; pin a bare
+    # TierStore even when TRACE_SHARDS widens the default (fleet-ledger
+    # conservation has its own battery in test_sharding_store.py).
+    return _make_device(kind, shards=1, **kw)
 from repro.core.precision import truncate_reference
 from repro.runtime.paging import (
     DEFAULT_DEGRADE_LADDER, KVPagePool, LOSSLESS_POLICY,

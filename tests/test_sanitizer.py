@@ -10,8 +10,16 @@ import pytest
 
 from repro.core.precision import VIEWS
 from repro.core.tier import (
-    ReadReq, SanitizerViolation, WriteReq, make_device,
+    ReadReq, SanitizerViolation, WriteReq,
 )
+from repro.core.tier import make_device as _make_device
+
+
+def make_device(kind, **kw):
+    # This file white-box-probes one device's _san/_ledger internals;
+    # pin a bare TierStore even when TRACE_SHARDS widens the default
+    # (the fleet-level sanitizer runs live in test_sharding_store.py).
+    return _make_device(kind, shards=1, **kw)
 
 
 def _payload(seed=0, shape=(64, 256)):

@@ -50,7 +50,8 @@ def test_request_trace_fields():
 
 
 def test_delete_prefix_frees_namespace_only():
-    dev = make_device("trace", kv_window=16)
+    # shards=1: asserts against one device's _index LRU
+    dev = make_device("trace", kv_window=16, shards=1)
     dev.submit([
         WriteReq(f"r0.p{i}", synth.kv_cache(16, 64, seed=i), kind=KV)
         for i in range(3)

@@ -1,0 +1,270 @@
+"""ShardedTierStore fleet invariants.
+
+Three battery groups, one per PR satellite:
+
+* a Hypothesis property test drives random write/delete/truncate/
+  acquire/release/delete_prefix interleavings through a one-shard
+  reference fleet and a wide fleet in lockstep — per-shard ledgers must
+  sum to the fleet ledger at every step, refcounts must agree with the
+  owning shard, surviving pages must read back byte-identical, and
+  ``resident_bytes("")`` must drain to 0 after full retirement;
+* fault injection: one deliberately slow shard (scaled LinkModel pipes)
+  may only cost latency — bytes, receipts and accounting must be
+  identical to a balanced fleet;
+* the accounting sanitizer runs clean on a sharded fleet and still
+  catches ledger corruption injected into a single shard.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.precision import FULL, VIEWS
+from repro.core.sharding import ShardedTierStore
+from repro.core.tier import (
+    KV,
+    LinkModel,
+    ReadReq,
+    SanitizerViolation,
+    WriteReq,
+)
+
+SUM_FIELDS = (
+    "dram_bytes_read", "dram_bytes_written", "dram_bytes_stored",
+    "raw_bytes_stored", "link_bytes_in", "link_bytes_out",
+    "index_bytes", "index_hits", "index_misses", "blocks",
+)
+
+KEYS = [f"r{i}.p{j}" for i in range(3) for j in range(2)] + [
+    "shared.h0.p0", "shared.h1.p0",
+]
+
+
+def _fleet_invariants(ref, fleet):
+    """The per-step contract: the wide fleet is indistinguishable from
+    the one-shard reference at the ledger, and the fleet view is exactly
+    the sum of its shards' ledgers."""
+    assert fleet.resident_bytes("") == ref.resident_bytes("")
+    assert fleet.resident_bytes("") == sum(
+        s.resident_bytes("") for s in fleet.shards)
+    assert fleet.stats.blocks == ref.stats.blocks
+    assert fleet.stats.blocks == sum(s.stats.blocks for s in fleet.shards)
+    for key in KEYS:
+        rc = fleet.refcount(key)
+        assert rc == ref.refcount(key)
+        assert rc == fleet.shards[fleet.owner(key)].refcount(key)
+
+
+def _apply(ops, ref, fleet):
+    """Interpret one op sequence on both stores; legality is judged on
+    the reference store so both always take the same branch."""
+    stores = (ref, fleet)
+    for code, ki, seed in ops:
+        key = KEYS[ki]
+        rc = ref.refcount(key)
+        if code == 0:                     # write / append a KV page
+            if rc > 1:                    # never rewrite under co-owners
+                continue
+            data = synth.kv_cache(16, 32, seed=seed)
+            for s in stores:
+                s.submit([WriteReq(key, data, kind=KV)])
+        elif code == 1:                   # acquire a co-owner reference
+            if rc < 1:
+                continue
+            try:
+                got = [s.acquire(key) for s in stores]
+            except ValueError:            # truncated page: both refuse
+                with pytest.raises(ValueError):
+                    fleet.acquire(key)
+                continue
+            assert got[0] == got[1]
+        elif code == 2:                   # release one reference
+            if rc < 1:
+                continue
+            assert ref.release(key) == fleet.release(key)
+        elif code == 3:                   # delete (co-owned → release)
+            for s in stores:
+                s.delete(key)
+        elif code == 4:                   # shed mantissa planes in place
+            if rc > 1:
+                continue
+            got = [s.truncate_planes([key], VIEWS["man4"]) for s in stores]
+            assert got[0] == got[1], "reclaimed bytes must not depend on n"
+        else:                             # retire a whole namespace
+            prefix = key.split(".", 1)[0]
+            assert ref.delete_prefix(prefix) == fleet.delete_prefix(prefix)
+        _fleet_invariants(ref, fleet)
+
+
+def test_sharded_ledger_property_random_interleavings():
+    """Hypothesis sweep over random op interleavings (satellite 2)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(
+        n=st.integers(min_value=2, max_value=4),
+        ops=st.lists(
+            st.tuples(st.integers(0, 5), st.integers(0, len(KEYS) - 1),
+                      st.integers(0, 7)),
+            max_size=30),
+    )
+    def run(n, ops):
+        ref = ShardedTierStore(1, kind="trace", kv_window=16, sanitize=True)
+        fleet = ShardedTierStore(n, kind="trace", kv_window=16,
+                                 sanitize=True)
+        _apply(ops, ref, fleet)
+        # surviving pages read back byte-identical however wide the fleet
+        live = [k for k in KEYS if ref.refcount(k) >= 1]
+        if live:
+            reqs = [ReadReq(k, kind=KV, view=FULL) for k in live]
+            for a, b in zip(ref.submit(reqs), fleet.submit(reqs)):
+                np.testing.assert_array_equal(a.data, b.data)
+        # full retirement: one delete_prefix("") per outstanding reference
+        for _ in range(len(ops) + 1):
+            if ref.resident_bytes("") == 0:
+                break
+            for s in (ref, fleet):
+                s.delete_prefix("")
+            _fleet_invariants(ref, fleet)
+        assert ref.resident_bytes("") == 0
+        assert fleet.resident_bytes("") == 0
+        assert all(s.resident_bytes("") == 0 and s.stats.blocks == 0
+                   for s in fleet.shards)
+
+    run()
+
+
+@pytest.mark.parametrize("rng_seed", [0, 1, 2])
+@pytest.mark.parametrize("n", [2, 4])
+def test_sharded_ledger_fixed_random_interleavings(n, rng_seed):
+    """Deterministic twin of the Hypothesis sweep: the same interpreter
+    over seeded random op tapes, so the interleaving invariants run even
+    where hypothesis is not installed."""
+    rng = np.random.default_rng(rng_seed)
+    ops = [(int(rng.integers(0, 6)), int(rng.integers(0, len(KEYS))),
+            int(rng.integers(0, 8))) for _ in range(40)]
+    ref = ShardedTierStore(1, kind="trace", kv_window=16, sanitize=True)
+    fleet = ShardedTierStore(n, kind="trace", kv_window=16, sanitize=True)
+    _apply(ops, ref, fleet)
+    for _ in range(len(ops) + 1):
+        if ref.resident_bytes("") == 0:
+            break
+        for s in (ref, fleet):
+            s.delete_prefix("")
+        _fleet_invariants(ref, fleet)
+    assert fleet.resident_bytes("") == 0
+    assert all(s.resident_bytes("") == 0 and s.stats.blocks == 0
+               for s in fleet.shards)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: a slow shard may cost time, never bits (satellite 3)
+# ---------------------------------------------------------------------------
+
+def _session(dev):
+    pages = {f"r{i}.p{j}": synth.kv_cache(16, 32, seed=90 + 4 * i + j)
+             for i in range(4) for j in range(3)}
+    wrecs = dev.submit([WriteReq(k, v, kind=KV) for k, v in pages.items()])
+    rrecs = dev.drain(dev.submit_async(
+        [ReadReq(k, kind=KV) for k in pages]))
+    return wrecs + rrecs
+
+
+def test_slow_shard_changes_latency_never_bytes():
+    fast = LinkModel()
+    slow = LinkModel(ddr_bw=fast.ddr_bw / 64, link_bw=fast.link_bw / 64,
+                     base_s=fast.base_s * 64)
+    balanced = ShardedTierStore(4, kind="trace", kv_window=16,
+                                link_models=[fast] * 4)
+    degraded = ShardedTierStore(4, kind="trace", kv_window=16,
+                                link_models=[slow] + [fast] * 3)
+    ra, rb = _session(balanced), _session(degraded)
+    slow_hit = False
+    for a, b in zip(ra, rb):
+        # every byte- and accounting-field identical; only time may move
+        for f in SUM_FIELDS + ("key", "op", "kind", "device_id"):
+            assert getattr(a, f) == getattr(b, f), f
+        if a.data is None:
+            assert b.data is None
+        else:
+            np.testing.assert_array_equal(a.data, b.data)
+        assert b.latency_s >= a.latency_s
+        if b.device_id == 0 and b.latency_s > a.latency_s:
+            slow_hit = True
+    assert slow_hit, "no request ever touched the slow shard"
+    # receipt conservation holds on the degraded fleet, shard by shard
+    for shard in degraded.shards:
+        assert shard.stats.blocks >= 0
+    for f in SUM_FIELDS:
+        assert (sum(getattr(r, f) for r in rb)
+                == getattr(degraded.stats, f)), f
+    # and the fleet skew readout flags nothing (bytes stay balanced even
+    # though time is not)
+    assert degraded.fleet_skew() == balanced.fleet_skew()
+
+
+def test_slow_shard_gates_async_completion():
+    """The straggler's queue, not the fleet average, bounds drain time."""
+    fast = LinkModel()
+    slow = LinkModel(ddr_bw=fast.ddr_bw / 64, link_bw=fast.link_bw / 64,
+                     base_s=fast.base_s * 64)
+    done = {}
+    for tag, models in (("balanced", [fast] * 4),
+                        ("slow", [slow] + [fast] * 3)):
+        dev = ShardedTierStore(4, kind="trace", kv_window=16,
+                               link_models=models)
+        dev.submit([
+            WriteReq(f"p{i}", synth.kv_cache(16, 64, seed=110 + i), kind=KV)
+            for i in range(16)
+        ])
+        dev.quiesce()
+        recs = dev.drain(dev.submit_async(
+            [ReadReq(f"p{i}", kind=KV) for i in range(16)]))
+        done[tag] = max(r.latency_s for r in recs)
+    assert done["slow"] > done["balanced"]
+    assert dev.busy_backlog_s == 0.0      # drain leaves no residual work
+
+
+# ---------------------------------------------------------------------------
+# sanitizer on a fleet: clean runs stay silent, per-shard corruption trips
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_env_reaches_every_shard(monkeypatch):
+    monkeypatch.setenv("TRACE_SANITIZE", "1")
+    fleet = ShardedTierStore(3, kind="trace", kv_window=16)
+    assert fleet.sanitize
+    assert all(s.sanitize for s in fleet.shards)
+
+
+def test_sanitized_fleet_runs_clean():
+    fleet = ShardedTierStore(3, kind="trace", kv_window=16, sanitize=True)
+    _session(fleet)
+    fleet.acquire("r0.p0")
+    fleet.delete_prefix("r0")             # survives: one reference left
+    assert fleet.refcount("r0.p0") == 1
+    fleet.truncate_planes(["r1.p0"], VIEWS["man4"])
+    fleet.delete_prefix("")
+    assert fleet.resident_bytes("") == 0
+
+
+def test_sanitizer_catches_single_shard_ledger_corruption():
+    fleet = ShardedTierStore(3, kind="trace", kv_window=16, sanitize=True)
+    pages = {f"r{i}.p{j}": synth.kv_cache(16, 32, seed=120 + 4 * i + j)
+             for i in range(4) for j in range(2)}
+    fleet.submit([WriteReq(k, v, kind=KV) for k, v in pages.items()])
+    # corrupt ONE shard's residency ledger behind the fleet's back
+    victim_key = next(k for k in pages if fleet.owner(k) == 1)
+    fleet.shards[1]._ledger[victim_key].payload_bytes += 7
+    with pytest.raises(SanitizerViolation) as ei:
+        fleet.submit([ReadReq(victim_key, kind=KV)])
+    assert ei.value.invariant == "ledger-stored-equality"
+    assert ei.value.key == victim_key
+    # the other shards are untouched and still serve reads
+    clean_key = next(k for k in pages if fleet.owner(k) != 1)
+    rec, = fleet.submit([ReadReq(clean_key, kind=KV)])
+    np.testing.assert_array_equal(
+        rec.data, ShardedTierStore(
+            3, kind="trace", kv_window=16).submit(
+            [WriteReq(clean_key, pages[clean_key], kind=KV),
+             ReadReq(clean_key, kind=KV)])[1].data)

@@ -119,7 +119,8 @@ def test_async_receipt_sums_conserved_across_flush_patterns(layout):
 
 
 def test_window_limit_bounds_inflight_and_triggers_execution():
-    dev = make_device("trace", kv_window=16, window=4)
+    # shards=1: pending counts assume one shared in-flight window
+    dev = make_device("trace", kv_window=16, window=4, shards=1)
     dev.submit([WriteReq(f"p{i}", synth.kv_cache(16, 32, seed=i), kind=KV)
                 for i in range(6)])
     base = _stats_dict(dev.stats)
@@ -141,7 +142,8 @@ def test_window_limit_bounds_inflight_and_triggers_execution():
 
 
 def test_out_of_order_wait_and_double_wait():
-    dev = make_device("trace", kv_window=16, window=64)
+    # shards=1: prefix-flush semantics are per-queue, not per-fleet
+    dev = make_device("trace", kv_window=16, window=64, shards=1)
     data = {f"p{i}": synth.kv_cache(16, 32, seed=40 + i) for i in range(6)}
     dev.submit([WriteReq(k, v, kind=KV) for k, v in data.items()])
     tickets = dev.submit_async([ReadReq(k, kind=KV) for k in data])
@@ -180,7 +182,8 @@ def test_flush_failure_faults_all_group_tickets_then_device_recovers():
     """A device-side failure mid-flush (simulated decode fault) must fault
     every ticket of the group with the same error, keep wait() re-raising,
     and leave the device usable for subsequent requests."""
-    dev = make_device("trace", kv_window=16, window=64)
+    # shards=1: the fault is injected into one device's layout object
+    dev = make_device("trace", kv_window=16, window=64, shards=1)
     data = {f"p{i}": synth.kv_cache(16, 32, seed=60 + i) for i in range(3)}
     dev.submit([WriteReq(k, v, kind=KV) for k, v in data.items()])
     tickets = dev.submit_async([ReadReq(k, kind=KV) for k in data])
@@ -254,7 +257,8 @@ def test_queue_delay_and_overlap_latency_model():
     monotone, each request's latency >= its serialized service, delay 0 on
     the group head (pipes quiesced), and the group completes faster than
     serial service."""
-    dev = make_device("trace", kv_window=32, window=64)
+    # shards=1: the cumulative pipe math below models one device's clock
+    dev = make_device("trace", kv_window=32, window=64, shards=1)
     dev.submit([WriteReq(f"p{i}", synth.kv_cache(32, 128, seed=80 + i),
                          kind=KV) for i in range(8)])
     dev.quiesce()     # writes are posted; idle the pipes so the read
@@ -288,7 +292,8 @@ def test_busy_clock_prices_cross_group_contention():
     quiesces) starts the next group on idle pipes.  Accounting stays
     exact: receipts-sum == DeviceStats regardless of latency pricing."""
     def fresh(window=2):
-        dev = make_device("trace", kv_window=16, window=window)
+        # shards=1: backlog pricing assumes one device-global busy clock
+        dev = make_device("trace", kv_window=16, window=window, shards=1)
         recs = dev.submit([WriteReq(f"p{i}", synth.kv_cache(16, 64,
                                                             seed=90 + i),
                                     kind=KV) for i in range(6)])
@@ -446,11 +451,11 @@ def test_write_heavy_async_interleaving_differential(layout):
 # KVPagePool over the async front-end (no model forward needed)
 # ---------------------------------------------------------------------------
 
-def _filled_pool(kind="trace", pages=6, layers=1, policy=None):
+def _filled_pool(kind="trace", pages=6, layers=1, policy=None, shards=None):
     from repro.runtime.paging import KVPagePool
 
     kw = {"policy": policy} if policy is not None else {}
-    pool = KVPagePool(kind, page_tokens=8,
+    pool = KVPagePool(make_device(kind, shards=shards), page_tokens=8,
                       hbm_budget_bytes=8 * 64 * 2 * 2, **kw)
     rng = np.random.default_rng(0)
     for i in range(pages):
@@ -524,7 +529,9 @@ def test_abandoned_prefetch_stays_conserved():
     """A prefetch flushed by unrelated traffic but never consumed by
     read_layer must still be folded into the pool's receipts: the
     receipts-sum == device-stats invariant survives abandonment."""
-    pool = _filled_pool()
+    # shards=1: "unrelated traffic drains the queue" is a single-queue
+    # coupling — on a fleet only the traffic's own shard flushes
+    pool = _filled_pool(shards=1)
     assert pool.prefetch_layer(0, "k") > 0
     # unrelated sync traffic drains the device queue → prefetch executes
     spilled = [p for p in pool._pages if p.resident is None]
@@ -543,3 +550,65 @@ def test_abandoned_prefetch_stays_conserved():
     assert not pool._prefetched
     assert _pool_traffic_sums(pool)["dram_bytes_read"] == after
     assert after == before   # served from settled prefetch receipts
+
+
+# ---------------------------------------------------------------------------
+# Sharded async differential: the fleet front-end preserves the
+# submit_async/drain contract for every layout and shard count
+# ---------------------------------------------------------------------------
+
+from repro.core.sharding import ShardedTierStore  # noqa: E402
+
+
+def _legal_batch(dev, kv_window):
+    batch = _mixed_batch(kv_window)
+    if not dev.layout.kv_transform:
+        batch = [r if not (isinstance(r, ReadReq) and r.kind == KV)
+                 else ReadReq(r.key, kind=KV, view=FULL, tag=r.tag)
+                 for r in batch]
+    return batch
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("n", [1, 3])
+def test_sharded_async_differential_vs_sync(layout, n):
+    """Fleet submit_async + drain == fleet submit == bare-device submit:
+    same bytes, same per-request traffic, for every layout, sync and
+    async, at n=1 and n>1."""
+    kv_window = 16
+    bare = TierStore(layout=layout, kv_window=kv_window)
+    sync_fleet = ShardedTierStore(n, layout=layout, kv_window=kv_window)
+    async_fleet = ShardedTierStore(n, layout=layout, kv_window=kv_window)
+    batch = _legal_batch(bare, kv_window)
+
+    bare_recs = bare.submit(batch)
+    sync_recs = sync_fleet.submit(batch)
+    async_recs = async_fleet.drain(async_fleet.submit_async(batch))
+
+    assert len(bare_recs) == len(sync_recs) == len(async_recs) == len(batch)
+    for b, s, a in zip(bare_recs, sync_recs, async_recs):
+        _check_receipt_pair(b, s)
+        _check_receipt_pair(s, a)
+    # fleet aggregate == receipt sums == bare-device totals
+    assert _sum_receipts(async_recs) == _stats_dict(async_fleet.stats)
+    assert _stats_dict(sync_fleet.stats) == _stats_dict(bare.stats)
+    assert _stats_dict(async_fleet.stats) == _stats_dict(bare.stats)
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_sharded_async_out_of_order_waits(n):
+    """Waiting tickets in reverse order across shards still yields each
+    request's own receipt, byte-identical to the in-order drain."""
+    fleet = ShardedTierStore(n, kind="trace", kv_window=16)
+    ref = ShardedTierStore(n, kind="trace", kv_window=16)
+    pages = {f"p{i}": synth.kv_cache(16, 32, seed=70 + i) for i in range(9)}
+    for dev in (fleet, ref):
+        dev.submit([WriteReq(k, v, kind=KV) for k, v in pages.items()])
+    reqs = [ReadReq(k, kind=KV) for k in pages]
+    in_order = ref.drain(ref.submit_async(reqs))
+    tickets = fleet.submit_async(reqs)
+    reversed_recs = [t.wait() for t in reversed(tickets)][::-1]
+    for a, b in zip(in_order, reversed_recs):
+        assert a.key == b.key
+        np.testing.assert_array_equal(a.data, b.data)
+    assert fleet.pending == 0

@@ -256,3 +256,109 @@ def test_batched_kv_stream_read_faster_than_sequential():
     t_batch, t_seq = best_of(batched), best_of(sequential)
     # generous margin to keep CI stable; locally the gap is much larger
     assert t_batch < t_seq, (t_batch, t_seq)
+
+
+# ---------------------------------------------------------------------------
+# Sharding differential: the fleet front-end must be invisible at the
+# request/receipt protocol (satellite of the ShardedTierStore PR)
+# ---------------------------------------------------------------------------
+
+from repro.core.sharding import ShardedTierStore  # noqa: E402
+
+SHARD_RECEIPT_FIELDS = RECEIPT_FIELDS + (
+    "latency_s", "queue_delay_s", "service_s", "device_id",
+)
+
+
+def _mixed_session(dev):
+    """The same mixed tensor/KV write+read session against any store."""
+    w = synth.weights(5_000, seed=20)
+    kv = synth.kv_cache(96, 64, seed=21)
+    recs = list(dev.submit([
+        WriteReq("w", w, kind=TENSOR),
+        WriteReq("a.s0", kv[:48], kind=KV),
+        WriteReq("b.s1", kv[48:], kind=KV),
+    ]))
+    recs += dev.submit([
+        ReadReq("w", kind=TENSOR, view=VIEWS["man4"]),
+        ReadReq("a.s0", kind=KV),
+        ReadReq("b.s1", kind=KV),
+        ReadReq("w", kind=TENSOR),
+    ])
+    return recs
+
+
+@pytest.mark.parametrize("kind", ["plain", "gcomp", "trace"])
+def test_sharded_n1_receipt_identical_to_bare(kind):
+    """A one-shard fleet is receipt-identical to the bare device: every
+    accounting field, every modeled time, the stamped device_id, and the
+    returned bytes — the wrapper adds routing, not semantics."""
+    bare = make_device(kind, shards=1, kv_window=32)
+    fleet = ShardedTierStore(1, kind=kind, kv_window=32)
+    ra, rb = _mixed_session(bare), _mixed_session(fleet)
+    assert len(ra) == len(rb)
+    for a, b in zip(ra, rb):
+        for f in SHARD_RECEIPT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), f
+        if a.data is None:
+            assert b.data is None
+        else:
+            np.testing.assert_array_equal(a.data, b.data)
+    assert _stats_dict(bare.stats) == _stats_dict(fleet.stats)
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("n", [2, 3])
+def test_sharded_reads_byte_identical_across_widths(layout, n):
+    """n>1 read-back is byte-identical to the one-shard fleet for every
+    layout: placement chooses where bytes live, never what they are."""
+    solo = ShardedTierStore(1, layout=layout, kv_window=16)
+    fleet = ShardedTierStore(n, layout=layout, kv_window=16)
+    pages = {f"r{i}.p{j}": synth.kv_cache(16, 32, seed=30 + 4 * i + j)
+             for i in range(3) for j in range(4)}
+    w = synth.weights(2_048, seed=29)
+    for dev in (solo, fleet):
+        dev.submit([WriteReq("w", w, kind=TENSOR)] + [
+            WriteReq(k, v, kind=KV) for k, v in pages.items()
+        ])
+    reqs = [ReadReq("w", kind=TENSOR)] + [
+        ReadReq(k, kind=KV) for k in pages
+    ]
+    for a, b in zip(solo.submit(reqs), fleet.submit(reqs)):
+        np.testing.assert_array_equal(a.data, b.data)
+    # the fleet actually spread the pages: more than one device moved bytes
+    if n > 1:
+        touched = [i for i, s in enumerate(fleet.per_device_stats())
+                   if s.dram_bytes_stored > 0]
+        assert len(touched) > 1, "hash-stripe left the fleet idle"
+    # device_id on every receipt names the serving shard
+    for rec in fleet.submit([ReadReq(k, kind=KV) for k in pages]):
+        assert rec.device_id == fleet.owner(rec.key)
+
+
+def test_sharded_precision_views_byte_identical():
+    """Precision-scaled reads (the paper's elastic KV) survive sharding
+    bit-for-bit on the plane-aligned trace device."""
+    solo = ShardedTierStore(1, kind="trace", kv_window=16)
+    fleet = ShardedTierStore(4, kind="trace", kv_window=16)
+    pages = {f"p{i}": synth.kv_cache(16, 64, seed=50 + i) for i in range(8)}
+    for dev in (solo, fleet):
+        dev.submit([WriteReq(k, v, kind=KV) for k, v in pages.items()])
+    for view in (FULL, VIEWS["man4"], VIEWS["man0"]):
+        reqs = [ReadReq(k, kind=KV, view=view) for k in pages]
+        for a, b in zip(solo.submit(reqs), fleet.submit(reqs)):
+            np.testing.assert_array_equal(a.data, b.data)
+
+
+def test_sharded_fleet_rejects_bad_batch_atomically():
+    """A malformed request anywhere in a fleet batch must reject before
+    ANY shard commits — same all-or-nothing contract as one device."""
+    fleet = ShardedTierStore(3, kind="trace", kv_window=16)
+    fleet.submit([WriteReq("ok", synth.kv_cache(16, 32, seed=60), kind=KV)])
+    before = [_stats_dict(s) for s in fleet.per_device_stats()]
+    with pytest.raises(KeyError):
+        fleet.submit([
+            WriteReq("new", synth.kv_cache(16, 32, seed=61), kind=KV),
+            ReadReq("never-written", kind=KV),
+        ])
+    assert [_stats_dict(s) for s in fleet.per_device_stats()] == before

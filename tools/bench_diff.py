@@ -60,6 +60,9 @@ FLOORS: Dict[str, float] = {
     "lz4_kernel_byte_identical": 1.0,
     # the vectorized slab encoder must never regress to scalar
     "encode_batched_speedup": 1.0,
+    # fleet scaling gate: 4 sharded devices must deliver >= 1.5x the
+    # aggregate tok/s of one (modeled, deterministic — not host noise)
+    "shard4_tok_s_gain": 1.5,
 }
 
 # Rows that exist to be tracked, never gated (their value is the

@@ -131,6 +131,9 @@ def build_symbol_tables():
     strings.update(("poisson", "bursty"))   # synth.request_trace kinds
     strings.update(("logical", "physical"))  # ServeScheduler capacity models
     strings.update(("none", "default"))      # --degrade-ladder specs
+    from repro.core import sharding
+    strings.update(sharding.PLACEMENTS)      # fleet placement policies
+    strings.add("TRACE_SHARDS")              # sharded-fleet env default
     # tracecheck rule ids + the sanitizer's invariant names (structured
     # vocabulary of tools/tracecheck and TierStore(sanitize=True))
     strings.update(("R1", "R2", "R3", "R4", "R5", "R6", "R1-R6",
