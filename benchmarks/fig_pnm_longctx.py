@@ -1,0 +1,175 @@
+"""PNM long-context sweep: device-side top-k gather vs link-bound readback.
+
+Past ~128k tokens of context even compressed KV is link-bound: the host
+pulls O(context) bytes per decode step no matter how well the planes
+pack.  The PNM read mode (``core.tier.GatherReq``) moves candidate
+scoring onto the device — a plane-subset decode at the ``score`` view
+(sign + the delta-transformed exponent planes, the compressible ones)
+feeds ``kernels/pnm_score.py`` and only the top-k winner pages cross the
+link — so per-step traffic drops to O(k · page) + 4 B/candidate.
+
+Two stages:
+
+* **measured** — a real ``KVPagePool`` on a trace device: per-page DRAM
+  and link costs of (a) the classic full readback, (b) the score-only
+  pass (a ``k=0`` gather), plus the inline byte-identity check that a
+  ``k >= candidates`` gather returns exactly the readback bytes.
+* **modeled** — those measured per-page constants scaled across a
+  128k → 1M context sweep under the paper's §IV-B SystemSpec: the
+  baseline's tok/s collapses as O(context) while PNM holds, and the
+  512k gain row (``pnm_tok_s_gain_512k``) gates in CI via
+  ``tools/bench_diff.py`` with an absolute ≥3x floor.
+
+``--smoke`` shrinks the measured stage for CI; with ``BENCH_JSON_DIR``
+set the rows land in ``BENCH_fig_pnm_longctx.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit
+
+PAGE_TOKENS = 32
+CHANNELS = 256             # measured-page channels (costs scale linearly)
+HBM_TOKENS = 8192          # resident context the sweep never spills
+CONTEXTS = (131072, 262144, 524288, 1048576)
+
+# Modeled serving footprint: a 7B-class decoder — every spilled token
+# carries K and V across all layers, at MODEL_CHANNELS per kind per
+# layer.  Per-page tier costs scale linearly in channels, so a model
+# page costs CH_RATIO measured pages.
+MODEL_LAYERS = 32
+MODEL_KINDS = 2            # k and v
+MODEL_CHANNELS = 1024      # kv_heads * head_dim per kind
+CH_RATIO = MODEL_CHANNELS // CHANNELS
+K_PER_GROUP = 8            # winner pages per (layer, kind) per step
+
+
+def _build_pool(kv: np.ndarray, n_pages: int):
+    from repro.runtime.paging import KVPagePool, LOSSLESS_POLICY
+
+    # Lossless policy = the link-bound baseline regime the sweep models:
+    # every spilled page round-trips at full precision, so the host
+    # pulls O(context) full-container bytes per step.
+    pool = KVPagePool(
+        "trace", page_tokens=PAGE_TOKENS,
+        hbm_budget_bytes=2 * PAGE_TOKENS * CHANNELS * 2,
+        policy=LOSSLESS_POLICY, sanitize=True,
+    )
+    for i in range(n_pages):
+        pool.append_page(0, "k", i * PAGE_TOKENS,
+                         kv[i * PAGE_TOKENS:(i + 1) * PAGE_TOKENS])
+    return pool
+
+
+def measure(n_pages: int):
+    """Per-page tier costs from a real device, plus the identity check.
+
+    Returns (dram_full, link_full, dram_score, compute_s_page): DRAM and
+    link bytes to ship one spilled page at full precision, DRAM bytes the
+    device touches to SCORE one candidate, and the modeled on-device
+    scoring seconds per page.
+    """
+    from repro.core import synth
+
+    kv = synth.kv_cache(PAGE_TOKENS * n_pages, CHANNELS, smooth=0.99,
+                        mean_snr=5.0, seed=0)
+    digest = np.ones(CHANNELS, np.float32)
+
+    pool = _build_pool(kv, n_pages)
+    spilled = [p for p in pool.iter_pages() if p.resident is None]
+    n = len(spilled)
+    d = pool.device.stats
+    mark = (d.dram_bytes_read, d.link_bytes_out)
+    base_data = pool.read_pages(spilled)
+    d = pool.device.stats
+    dram_full = (d.dram_bytes_read - mark[0]) / n
+    link_full = (d.link_bytes_out - mark[1]) / n
+
+    pool_sc = _build_pool(kv, n_pages)
+    d = pool_sc.device.stats
+    mark = (d.dram_bytes_read, d.device_compute_s)
+    pool_sc.gather_topk(digest, 0)
+    d = pool_sc.device.stats
+    dram_score = (d.dram_bytes_read - mark[0]) / n
+    compute_s = (d.device_compute_s - mark[1]) / n
+
+    # Hard invariant, not a perf number: a gather whose k covers every
+    # candidate ships exactly the bytes the classic readback would.
+    pool_id = _build_pool(kv, n_pages)
+    winners, data = pool_id.gather_topk(digest, n_pages + 1)
+    by_key = {p.key: a for p, a in zip(spilled, base_data)}
+    identical = (len(winners) == n and all(
+        np.array_equal(by_key[p.key], a) for p, a in zip(winners, data)))
+
+    emit("fig_pnm_longctx", "pnm_topk_byte_identical", float(identical), "",
+         "k >= candidates gather bytes == full readback bytes")
+    emit("fig_pnm_longctx", "baseline_dram_bytes_page", float(dram_full),
+         "B", "compressed plane bytes read per full-precision page")
+    emit("fig_pnm_longctx", "baseline_link_bytes_page", float(link_full),
+         "B", "decoded BF16 bytes shipped per page (link-bound baseline)")
+    emit("fig_pnm_longctx", "pnm_score_dram_bytes_page", float(dram_score),
+         "B", "score-view plane bytes the device reads per candidate")
+    return dram_full, link_full, dram_score, compute_s
+
+
+def sweep(dram_full: float, link_full: float, dram_score: float,
+          compute_s: float):
+    """Scale the measured per-page constants across the context sweep."""
+    from repro.core.system_model import SystemSpec
+
+    sys_ = SystemSpec()
+    groups = MODEL_LAYERS * MODEL_KINDS
+    for ctx in CONTEXTS:
+        # Real candidate pages per step (one per page window per layer
+        # per kind) and their cost in measured-page equivalents.
+        n_cand = max(ctx - HBM_TOKENS, 0) // PAGE_TOKENS * groups
+        n_eq = n_cand * CH_RATIO
+        n_read = sys_.f_rd * n_eq             # baseline touches f_rd/step
+        t_base = max(n_read * dram_full / sys_.cxl_ddr_bw,
+                     n_read * link_full / sys_.cxl_link_bw,
+                     1.0 / sys_.cap_tok_s)
+        k_eq = min(K_PER_GROUP * groups, n_cand) * CH_RATIO
+        pnm_link = 4.0 * n_cand + k_eq * link_full
+        pnm_dram = n_eq * dram_score + k_eq * dram_full
+        t_pnm = max(pnm_dram / sys_.cxl_ddr_bw,
+                    pnm_link / sys_.cxl_link_bw,
+                    n_eq * compute_s,
+                    1.0 / sys_.cap_tok_s)
+        tag = f"{ctx // 1024}k"
+        emit("fig_pnm_longctx", f"baseline_link_kb_step_{tag}",
+             n_read * link_full / 1e3, "KB",
+             "link bytes per decode step, full readback (O(context))")
+        emit("fig_pnm_longctx", f"pnm_link_kb_step_{tag}",
+             pnm_link / 1e3, "KB",
+             f"link bytes per decode step, top-{K_PER_GROUP}/group "
+             f"gather (O(k))")
+        emit("fig_pnm_longctx", f"baseline_tok_s_{tag}", 1.0 / t_base,
+             "tok/s", "modeled decode throughput, full readback")
+        emit("fig_pnm_longctx", f"pnm_tok_s_{tag}", 1.0 / t_pnm,
+             "tok/s", "modeled decode throughput, PNM gather")
+        if ctx == 524288:
+            emit("fig_pnm_longctx", "pnm_tok_s_gain_512k",
+                 t_base / t_pnm, "x",
+                 "PNM over link-bound baseline at 512k (CI floor: 3x)")
+
+
+def run(smoke: bool = False):
+    t0 = time.perf_counter()
+    constants = measure(n_pages=12 if smoke else 24)
+    sweep(*constants)
+    emit("fig_pnm_longctx", "measure_wall_ms",
+         (time.perf_counter() - t0) * 1e3, "ms",
+         "measured-stage host wall-clock (track only)")
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(smoke="--smoke" in sys.argv)
+    from .common import dump_json
+
+    dump_json("fig_pnm_longctx")       # no-op unless BENCH_JSON_DIR is set

@@ -102,6 +102,15 @@ MAN2 = PrecisionView(r_m=2, d_m=1, name="man2")                    # 11 bits
 MAN0 = PrecisionView(r_m=0, d_m=1, name="man0")                    # 9 bits
 VIEWS = {v.name: v for v in (FULL, MAN4, MAN2, MAN0)}
 
+# PNM scoring view (GatherReq.score_view default): sign + the full
+# exponent — the delta-transformed, most compressible planes — with NO
+# mantissa planes at all, not even a rounding guard.  Magnitudes come
+# back quantized to signed powers of two, which is plenty for top-k
+# *ranking*, and the score pass skips every incompressible mantissa
+# plane.  Not in VIEWS: it is a ranking alias, not a storage precision a
+# degrade ladder should ever truncate to.
+SCORE = PrecisionView(r_m=0, d_m=0, name="score")                  # 9 bits
+
 
 # ---------------------------------------------------------------------------
 # Reconstruction (R operator) on uint16 bit patterns

@@ -50,6 +50,8 @@ from .precision import FULL, PrecisionView
 from .tier import (
     DEVICE_KINDS,
     DeviceStats,
+    GatherReq,
+    GatherResult,
     KV,
     LinkModel,
     ReadReq,
@@ -182,6 +184,53 @@ for _field in dataclasses.fields(DeviceStats):
     setattr(FleetStats, _field.name, _fleet_sum(_field.name))
 
 
+class _MergedGatherTicket:
+    """Ticket over one fleet-spanning :class:`GatherReq`.
+
+    Wraps the per-shard sub-gather tickets; :meth:`wait` waits every
+    shard's local top-k and merges them into ONE receipt through the
+    same host-side merge the sync path uses (memoized — repeat waits
+    return the identical receipt, matching :class:`Ticket` semantics).
+    """
+
+    __slots__ = ("request", "_store", "_inner", "_per_pos", "_receipt",
+                 "_error")
+
+    def __init__(self, store: "ShardedTierStore", request: GatherReq,
+                 inner: Sequence[Ticket],
+                 per_pos: Sequence[Sequence[int]]):
+        self.request = request
+        self._store = store
+        self._inner = list(inner)
+        self._per_pos = per_pos
+        self._receipt: Optional[Receipt] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        if self._receipt is not None or self._error is not None:
+            return True
+        return all(t.done for t in self._inner)
+
+    def wait(self) -> Receipt:
+        if self._error is not None:
+            raise self._error
+        if self._receipt is None:
+            try:
+                recs = [t.wait() for t in self._inner]
+            except BaseException as e:
+                self._error = e
+                raise
+            self._receipt = self._store._merge_gather(
+                self.request, recs, self._per_pos)
+        return self._receipt
+
+    def __repr__(self):
+        state = ("done" if self._receipt is not None
+                 else "failed" if self._error is not None else "pending")
+        return f"_MergedGatherTicket({self.request.key!r}, {state})"
+
+
 class ShardedTierStore:
     """N inner tier devices behind the single-device request protocol.
 
@@ -280,24 +329,161 @@ class ShardedTierStore:
                 slots[s].append(idx)
         return per, slots
 
+    # -- fleet scatter-gather (PNM top-k) -------------------------------------
+    def _split_gather(self, req: GatherReq
+                      ) -> Tuple[List[Optional[GatherReq]],
+                                 List[List[int]]]:
+        """One sub-GatherReq per shard holding candidates (keys keep
+        their relative — therefore global tie-break — order).  Each
+        shard ranks its local candidates at ``k' = min(k, local count)``:
+        any global winner is in the top-k of its own shard, so the
+        global top-k is always a subset of the union of local winners.
+
+        Returns ``(subs, per_pos)`` where ``per_pos[s][j]`` is the
+        global candidate position of shard ``s``'s j-th key.
+        """
+        per_keys: List[List[str]] = [[] for _ in range(self.n_shards)]
+        per_pos: List[List[int]] = [[] for _ in range(self.n_shards)]
+        for pos, key in enumerate(req.keys):
+            s = self._read_shard(key)
+            per_keys[s].append(key)
+            per_pos[s].append(pos)
+        if not req.keys:
+            # degenerate zero-candidate gather: run it (k=0, empty
+            # winner set) on the default-routed shard so the caller
+            # still gets one well-formed receipt
+            subs = [None] * self.n_shards
+            subs[self._read_shard(req.key)] = GatherReq(
+                keys=(), digest=req.digest, k=0, kind=req.kind,
+                views=None if req.views is None else (),
+                score_view=req.score_view, tag=req.tag,
+            )
+            return subs, per_pos
+        subs: List[Optional[GatherReq]] = []
+        for s in range(self.n_shards):
+            if not per_keys[s]:
+                subs.append(None)
+                continue
+            views = (tuple(req.views[p] for p in per_pos[s])
+                     if req.views is not None else None)
+            subs.append(GatherReq(
+                keys=tuple(per_keys[s]), digest=req.digest,
+                k=min(req.k, len(per_keys[s])), kind=req.kind,
+                views=views, score_view=req.score_view, tag=req.tag,
+            ))
+        return subs, per_pos
+
+    def _merge_gather(self, req: GatherReq, shard_recs: Sequence[Receipt],
+                      per_pos: Sequence[Sequence[int]]) -> Receipt:
+        """Fold per-shard local top-k receipts into one fleet receipt.
+
+        Scores reassemble into the request's global candidate order and
+        the global top-k re-selects with the same deterministic
+        tie-break the single-device kernel uses (local per-shard order
+        preserves global order, so ties resolve identically at any
+        shard count).  Byte/compute fields sum, latency is the slowest
+        shard (scatter-gather completes when the last shard answers);
+        the per-shard receipts stay applied to their own device stats,
+        so the fleet's per-shard receipts-sum identity is untouched.
+        """
+        from ..kernels.pnm_score import topk_select
+
+        occupied = [pos for pos in per_pos if pos]
+        scores = np.full(len(req.keys), -np.inf, dtype=np.float32)
+        data_by_pos: Dict[int, np.ndarray] = {}
+        dev_by_pos: Dict[int, int] = {}
+        ri = iter(shard_recs)
+        recs = [next(ri) if pos else None for pos in per_pos]
+        for pos, rec in zip(per_pos, recs):
+            if not pos:
+                continue
+            scores[list(pos)] = rec.gather.scores
+            for idx, arr in zip(rec.gather.indices, rec.gather.data):
+                data_by_pos[pos[idx]] = arr
+                dev_by_pos[pos[idx]] = rec.device_id
+        winner_ix = topk_select(scores, req.k)
+        live = [r for r in recs if r is not None]
+        return Receipt(
+            key=req.key, op="gather", kind=req.kind, tag=req.tag,
+            blocks=sum(r.blocks for r in live),
+            dram_bytes_read=sum(r.dram_bytes_read for r in live),
+            dram_bytes_written=sum(r.dram_bytes_written for r in live),
+            dram_bytes_stored=sum(r.dram_bytes_stored for r in live),
+            raw_bytes_stored=sum(r.raw_bytes_stored for r in live),
+            link_bytes_in=sum(r.link_bytes_in for r in live),
+            link_bytes_out=sum(r.link_bytes_out for r in live),
+            index_bytes=sum(r.index_bytes for r in live),
+            index_hits=sum(r.index_hits for r in live),
+            index_misses=sum(r.index_misses for r in live),
+            codec_blocks=sum(r.codec_blocks for r in live),
+            codec_bypass=sum(r.codec_bypass for r in live),
+            latency_s=max(r.latency_s for r in live),
+            queue_delay_s=max(r.queue_delay_s for r in live),
+            service_s=max(r.service_s for r in live),
+            device_compute_s=sum(r.device_compute_s for r in live),
+            device_id=live[0].device_id,
+            gather=GatherResult(
+                keys=[req.keys[i] for i in winner_ix],
+                indices=list(winner_ix), scores=scores,
+                data=[data_by_pos[i] for i in winner_ix],
+            ),
+        )
+
+    def _plan_gathers(self, requests: Sequence[Request]):
+        """Split a mixed batch into (rest, rest indices, gather plans);
+        pre-validates every shard's combined sub-batch so a malformed
+        fleet batch — gathers included — rejects before ANY shard
+        commits."""
+        gathers = [(i, r) for i, r in enumerate(requests)
+                   if isinstance(r, GatherReq)]
+        rest_ix = [i for i, r in enumerate(requests)
+                   if not isinstance(r, GatherReq)]
+        rest = [requests[i] for i in rest_ix]
+        per, slots = self._partition(rest)
+        plans = [(i, self._split_gather(r)) for i, r in gathers]
+        for s, shard in enumerate(self.shards):
+            sub = list(per[s])
+            for _, (subs, _pp) in plans:
+                if subs[s] is not None:
+                    sub.append(subs[s])
+            if sub:
+                shard.validate(sub)
+        return rest_ix, per, slots, plans
+
     # -- batched entry points ------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> List[Receipt]:
         """Execute a batch across the fleet; one receipt per request, in
         order, each stamped with the ``device_id`` that served it.
         Every shard's sub-batch pre-flights :meth:`TierStore.validate`
         first, so a malformed batch rejects before ANY shard commits —
-        the same atomicity one device gives."""
-        per, slots = self._partition(requests)
-        for shard, sub in zip(self.shards, per):
-            if sub:
-                shard.validate(sub)
+        the same atomicity one device gives.
+
+        :class:`GatherReq` requests scatter-gather: candidates split by
+        home shard, each shard scores and returns its local top-k, and
+        the host merges the candidate sets into the global top-k (one
+        receipt, scores in global candidate order).  Like the
+        single-device path, writes and plain reads execute first, then
+        gathers in listed order.
+        """
+        rest_ix, per, slots, plans = self._plan_gathers(requests)
         receipts: List[Optional[Receipt]] = [None] * len(requests)
         for shard, sub, sl in zip(self.shards, per, slots):
             if not sub:
                 continue
             for i, rec in zip(sl, shard.submit(sub)):
                 if i is not None:
-                    receipts[i] = rec
+                    receipts[rest_ix[i]] = rec
+        for i, (subs, per_pos) in plans:
+            live = [(s, sub) for s, sub in enumerate(subs)
+                    if sub is not None]
+            if len(live) == 1:
+                # single-shard gather: the inner receipt IS the answer
+                # (receipt-identical to a bare store)
+                s, sub = live[0]
+                receipts[i] = self.shards[s].submit([sub])[0]
+            else:
+                recs = [self.shards[s].submit([sub])[0] for s, sub in live]
+                receipts[i] = self._merge_gather(requests[i], recs, per_pos)
         return receipts  # type: ignore[return-value]
 
     def submit_async(self, requests: Sequence[Request]) -> List[Ticket]:
@@ -305,22 +491,33 @@ class ShardedTierStore:
         order.  Tickets are the inner shards' own (they know their
         store), so ``Ticket.wait`` flushes exactly the owning shard's
         queue prefix.  Replica-copy write tickets are born complete and
-        dropped — their receipts are accounted on their shard."""
-        per, slots = self._partition(requests)
-        for shard, sub in zip(self.shards, per):
-            if sub:
-                shard.validate(sub)
+        dropped — their receipts are accounted on their shard.  A
+        fleet-spanning gather returns a merged ticket whose ``wait``
+        waits every shard's local top-k and merges, byte-identical to
+        the sync scatter-gather."""
+        rest_ix, per, slots, plans = self._plan_gathers(requests)
         tickets: List[Optional[Ticket]] = [None] * len(requests)
         for shard, sub, sl in zip(self.shards, per, slots):
             if not sub:
                 continue
             for i, t in zip(sl, shard.submit_async(sub)):
                 if i is not None:
-                    tickets[i] = t
+                    tickets[rest_ix[i]] = t
                 else:
                     # replica-copy write: born complete on its shard —
                     # collect the receipt now, it has no caller-facing slot
                     t.wait()
+        for i, (subs, per_pos) in plans:
+            live = [(s, sub) for s, sub in enumerate(subs)
+                    if sub is not None]
+            if len(live) == 1:
+                s, sub = live[0]
+                tickets[i] = self.shards[s].submit_async([sub])[0]
+            else:
+                inner = [self.shards[s].submit_async([sub])[0]
+                         for s, sub in live]
+                tickets[i] = _MergedGatherTicket(self, requests[i], inner,
+                                                 per_pos)
         return tickets  # type: ignore[return-value]
 
     @property

@@ -144,7 +144,7 @@ from .bitplane import (
 from .kv_transform import (
     KVBlockMeta, kv_forward, kv_forward_batch, kv_inverse_batch,
 )
-from .precision import EXP_BITS, PrecisionView, FULL, reconstruct_u16
+from .precision import EXP_BITS, PrecisionView, FULL, SCORE, reconstruct_u16
 
 INDEX_ENTRY_BYTES = 64  # paper §III-D: one compact entry per 4 KB block
 
@@ -191,7 +191,69 @@ class ReadReq:
     tag: str = ""
 
 
-Request = Union[WriteReq, ReadReq]
+@dataclasses.dataclass(frozen=True)
+class GatherReq:
+    """Device-side top-k gather descriptor (the PNM read mode).
+
+    The host names the candidate ``keys`` (spilled KV pages resident on
+    the device), a flat ``(channels,)`` float32 query ``digest`` and a
+    winner count ``k``.  The device scores every candidate ON the device
+    — a plane-subset decode at ``score_view`` (sign + the compressible
+    exponent planes ONLY by default, so scoring DRAM traffic is a small
+    fraction of a full fetch) feeding the ``kernels.pnm_score`` kernel —
+    and returns full-precision data for only the top-k pages, so link
+    bytes drop from O(candidates) to O(k · page) + 4 B/candidate of
+    shipped scores.  ``views`` optionally pins a per-key winner fetch
+    view (position-aligned with ``keys``; ``FULL`` when omitted), which
+    is what makes a gather at ``k >= len(keys)`` byte-identical to
+    individual :class:`ReadReq` submissions at the same views.
+
+    Ties on equal scores break by candidate list position (stable,
+    host-chosen order), so winner selection is deterministic across
+    sync/async submission and shard counts.
+    """
+
+    keys: Tuple[str, ...]
+    digest: np.ndarray
+    k: int
+    kind: str = KV
+    views: Optional[Tuple[PrecisionView, ...]] = None
+    score_view: PrecisionView = SCORE
+    tag: str = ""
+
+    @property
+    def key(self) -> str:
+        """First candidate key — routing/repr convenience so a gather
+        slots into code paths that label requests by ``request.key``."""
+        return self.keys[0] if self.keys else ""
+
+
+Request = Union[WriteReq, ReadReq, GatherReq]
+
+
+def _req_keys(req: Request) -> frozenset:
+    """Every device key one request touches (hazard-fence granularity)."""
+    if isinstance(req, GatherReq):
+        return frozenset(req.keys)
+    return frozenset((req.key,))
+
+
+@dataclasses.dataclass
+class GatherResult:
+    """Winner set of one executed :class:`GatherReq`.
+
+    ``scores`` covers EVERY candidate (in the request's ``keys`` order,
+    float32) — the host ledger can fold the full ranking into page
+    importances, not just the winners.  ``keys`` / ``indices`` /
+    ``data`` are the winners in descending-score order (ties by
+    candidate position), ``data`` holding exactly the bytes a plain
+    read of that key at its winner view would have returned.
+    """
+
+    keys: List[str]
+    indices: List[int]
+    scores: np.ndarray
+    data: List[np.ndarray]
 
 
 @dataclasses.dataclass
@@ -222,8 +284,10 @@ class Receipt:
     latency_s: float = 0.0        # delivery time: queue_delay_s + service
     queue_delay_s: float = 0.0    # wait behind earlier in-flight requests
     service_s: float = 0.0        # serialized service time (sync latency)
+    device_compute_s: float = 0.0  # device-side PNM scoring time (gathers)
     device_id: int = 0            # which device in a fleet served this
     data: Optional[np.ndarray] = None
+    gather: Optional[GatherResult] = None   # winner set (gather ops only)
 
     @property
     def dram_bytes(self) -> int:
@@ -250,6 +314,7 @@ class LinkModel:
     ddr_bw: float = 256e9         # device-side DDR
     link_bw: float = 512e9        # CXL.mem per direction
     base_s: float = 1e-6          # fixed request overhead
+    pnm_ops_s: float = 2e12       # near-memory scoring throughput (elem/s)
 
     @classmethod
     def for_design(cls, design: str, comp_ratio: float = 1.5,
@@ -265,6 +330,12 @@ class LinkModel:
     def latency(self, dram_bytes: int, link_bytes: int) -> float:
         return self.base_s + max(dram_bytes / self.ddr_bw,
                                  link_bytes / self.link_bw)
+
+    def device_compute(self, elems: int) -> float:
+        """Time the device's near-memory unit spends scoring ``elems``
+        candidate elements for one gather (a third resource next to the
+        DDR and link pipes; it extends delivery, never byte traffic)."""
+        return elems / self.pnm_ops_s
 
     def schedule(
         self, traffic: Sequence[Tuple[int, int]],
@@ -315,6 +386,7 @@ class DeviceStats:
     raw_bytes_stored: int = 0       # logical (uncompressed) footprint
     codec_blocks: int = 0           # payload streams offered to the codec
     codec_bypass: int = 0           # ... stored raw (bypass, paper §III-D)
+    device_compute_s: float = 0.0   # near-memory scoring time (PNM gathers)
 
     @property
     def bypass_rate(self) -> float:
@@ -328,6 +400,7 @@ class DeviceStats:
         self.link_bytes_in = 0
         self.index_bytes = 0
         self.index_hits = self.index_misses = 0
+        self.device_compute_s = 0.0
 
     def apply(self, r: Receipt):
         self.dram_bytes_read += r.dram_bytes_read
@@ -342,6 +415,7 @@ class DeviceStats:
         self.blocks += r.blocks
         self.codec_blocks += r.codec_blocks
         self.codec_bypass += r.codec_bypass
+        self.device_compute_s += r.device_compute_s
 
     @property
     def compression_ratio(self) -> float:
@@ -1104,6 +1178,39 @@ class TierStore:
                         and not self._kv_staging.get(req.key)
                         and req.key not in written):
                     raise KeyError(req.key)
+            elif isinstance(req, GatherReq):
+                if req.kind not in (TENSOR, KV):
+                    raise ValueError(f"unknown request kind {req.kind!r}")
+                if req.k < 0:
+                    raise ValueError(f"gather k must be >= 0, got {req.k}")
+                digest = np.asarray(req.digest)
+                if digest.ndim != 1 or digest.size == 0:
+                    raise ValueError(
+                        "gather digest must be a flat (channels,) vector"
+                    )
+                if (req.views is not None
+                        and len(req.views) != len(req.keys)):
+                    raise ValueError(
+                        f"gather views ({len(req.views)}) must align "
+                        f"with keys ({len(req.keys)})"
+                    )
+                kv_exp = req.kind == KV and self.layout.kv_transform
+                for view in (req.score_view,) + tuple(req.views or ()):
+                    if kv_exp and view.r_e != EXP_BITS:
+                        raise ValueError(
+                            "KV views must keep the full (delta) exponent"
+                        )
+                for key in req.keys:
+                    if (key not in self._tensors
+                            and not self._kv_staging.get(key)
+                            and key not in written):
+                        raise KeyError(key)
+                    c = self._kv_channels.get(key)
+                    if c is not None and c != digest.size:
+                        raise ValueError(
+                            f"gather digest has {digest.size} channels "
+                            f"but {key!r} stores {c}"
+                        )
             else:
                 raise TypeError(f"not a tier request: {req!r}")
 
@@ -1196,8 +1303,8 @@ class TierStore:
         # same key would let those reads observe data from their future.
         # Flush the queue first (groups are prefixes, so order holds).
         if writes:
-            hot = {w.key for w in writes}
-            if any(t.request.key in hot for t in self._queue):
+            hot = frozenset(w.key for w in writes)
+            if any(hot & _req_keys(t.request) for t in self._queue):
                 self._flush_queue(len(self._queue), wait=False)
         tickets: Dict[int, Ticket] = {}
         if writes:
@@ -1292,9 +1399,12 @@ class TierStore:
         link_b = max(self._link_free_s - now, 0.0)
         times = self.link_model.schedule(traffic, ddr_backlog_s=ddr_b,
                                          link_backlog_s=link_b)
+        # Device compute (PNM scoring) is a third resource next to the
+        # DDR/link pipes: it extends that request's delivery time but
+        # occupies neither pipe, so later groups don't queue behind it.
         for rec, (delay, done) in zip(recs, times):
             rec.queue_delay_s = delay
-            rec.latency_s = done
+            rec.latency_s = done + rec.device_compute_s
         lm = self.link_model
         self._ddr_free_s = now + lm.base_s + ddr_b \
             + sum(t[0] for t in traffic) / lm.ddr_bw
@@ -1303,7 +1413,7 @@ class TierStore:
         if wait:
             # host blocked until the last delivery; pipes are drained past
             # this point, so backlogs collapse to zero for the next group
-            self._now_s = now + times[-1][1]
+            self._now_s = now + max(r.latency_s for r in recs)
 
     @property
     def busy_backlog_s(self) -> float:
@@ -1500,19 +1610,124 @@ class TierStore:
         self._encode_commit(slab)
 
     # -- read path -----------------------------------------------------------
-    def _do_reads(self, reqs: Sequence[ReadReq]) -> List[Receipt]:
+    def _do_reads(self, reqs: Sequence[Request]) -> List[Receipt]:
         # Gather every requested block, tally per-request DRAM/index traffic,
         # then decode per view-group in vectorized passes.  Receipts are
         # applied to the aggregate in a finally so an exception mid-batch
         # cannot desync stats from already-flushed staging windows.
-        recs = [Receipt(key=r.key, op="read", kind=r.kind, tag=r.tag)
+        #
+        # Plain reads decode as ONE batched group first; GatherReqs (the
+        # PNM top-k path) then execute in listed order — a gather's index
+        # accounting depends on its own score-then-winner fetch sequence,
+        # so it cannot fold into the shared decode slab.
+        recs = [Receipt(key=r.key,
+                        op="gather" if isinstance(r, GatherReq) else "read",
+                        kind=r.kind, tag=r.tag)
                 for r in reqs]
         try:
-            return self._gather_and_decode(reqs, recs)
+            read_ix = [i for i, r in enumerate(reqs)
+                       if not isinstance(r, GatherReq)]
+            if read_ix:
+                self._gather_and_decode([reqs[i] for i in read_ix],
+                                        [recs[i] for i in read_ix])
+            for i, req in enumerate(reqs):
+                if isinstance(req, GatherReq):
+                    self._do_gather(req, recs[i])
+            return recs
         finally:
             for rec in recs:
                 self._apply_receipt(rec)
-            self._sanitize_boundary({r.key for r in reqs})
+            touched: Set[str] = set()
+            for r in reqs:
+                touched |= _req_keys(r)
+            self._sanitize_boundary(touched)
+
+    def _do_gather(self, req: GatherReq, rec: Receipt):
+        """Execute one PNM gather: score every candidate device-side on
+        the ``score_view`` plane subset, then decode full precision for
+        the top-k winners only.
+
+        Accounting: the scoring pass reads only the score view's planes
+        from DRAM (plus index touches) and ships 4 B/candidate of scores
+        over the link; winners are then fetched exactly like plain reads
+        at their per-key views, so a gather with ``k >= len(keys)``
+        returns byte-identical data to individual :class:`ReadReq`
+        submissions.  ``device_compute_s`` prices the scoring kernel at
+        :meth:`LinkModel.device_compute` over the scored elements.
+        """
+        from ..kernels.pnm_score import page_scores_u16, topk_select
+
+        if req.kind == KV:
+            for key in req.keys:
+                if self._kv_staging.get(key):
+                    # implicit flush, accounted to this gather
+                    self._commit_kv_window(rec, key)
+
+        def _fetch(keys: Sequence[str], views: Sequence[PrecisionView]
+                   ) -> List[np.ndarray]:
+            """Plane-aligned fetch + decode of whole keys, tallied into
+            ``rec`` — the same per-block walk as ``_gather_and_decode``."""
+            per_key_blocks: List[List[_Block]] = []
+            per_key_views: List[List[PrecisionView]] = []
+            for key, view in zip(keys, views):
+                blocks = self._tensors.get(key, [])
+                eff = [view if b.view is None
+                       else _intersect_views(view, b.view) for b in blocks]
+                for i, (b, v) in enumerate(zip(blocks, eff)):
+                    self._touch_index(rec, key, i)
+                    for p in self.layout.fetched_payloads(b, v):
+                        rec.dram_bytes_read += len(b.payloads[p])
+                per_key_blocks.append(list(blocks))
+                per_key_views.append(eff)
+            groups: Dict[PrecisionView, List[_Block]] = {}
+            for eff, blocks in zip(per_key_views, per_key_blocks):
+                for v, b in zip(eff, blocks):
+                    groups.setdefault(v, []).append(b)
+            decoded = {
+                v: iter(self.layout.decode_batch(blocks, v, self.codec))
+                for v, blocks in groups.items()
+            }
+            out = []
+            for key, eff in zip(keys, per_key_views):
+                segs = [next(decoded[v]) for v in eff]
+                out.append(self._assemble(
+                    ReadReq(key, kind=req.kind, view=FULL), segs))
+            return out
+
+        # --- scoring pass: plane-subset decode feeds the PNM kernel ---
+        score_views = [req.score_view] * len(req.keys)
+        candidates = _fetch(req.keys, score_views)
+        scores = page_scores_u16(candidates, np.asarray(req.digest,
+                                                        dtype=np.float32))
+        # scores ship to the host: 4 B (f32) per candidate
+        rec.link_bytes_out += 4 * len(req.keys)
+        rec.device_compute_s += self.link_model.device_compute(
+            sum(int(c.size) for c in candidates))
+
+        # --- winner pass: full-precision fetch for the top-k only ---
+        winner_ix = topk_select(scores, req.k)
+        winner_views = [req.views[i] if req.views is not None else FULL
+                        for i in winner_ix]
+        winner_keys = [req.keys[i] for i in winner_ix]
+        data = _fetch(winner_keys, winner_views)
+        if self.layout.plane_aligned:
+            # effective per-block views may be truncation-clamped below
+            # the request view; recompute the shipped bits per winner
+            for key, view, arr in zip(winner_keys, winner_views, data):
+                for b in self._tensors.get(key, []):
+                    v = view if b.view is None else _intersect_views(view,
+                                                                     b.view)
+                    n = b.valid_elems
+                    if b.kv_meta is not None:
+                        n = b.kv_meta.n_tokens * b.kv_meta.n_channels
+                    rec.link_bytes_out += n * v.bits // 8
+        else:
+            rec.link_bytes_out += sum(a.size for a in data) * BF16_BITS // 8
+        rec.gather = GatherResult(keys=winner_keys, indices=list(winner_ix),
+                                  scores=scores, data=data)
+        rec.service_s = rec.latency_s = self.link_model.latency(
+            rec.dram_bytes_read, rec.link_bytes_out
+        ) + rec.device_compute_s
 
     def _gather_and_decode(self, reqs: Sequence[ReadReq],
                            recs: List[Receipt]) -> List[Receipt]:

@@ -24,9 +24,11 @@ online max/sum/accumulator carried in VMEM scratch across the S-grid
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -108,3 +110,68 @@ def decode_attention_pallas(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Partial attention sums — the PNM "ship statistics, not pages" algebra
+# ---------------------------------------------------------------------------
+# A PNM device holding a KV chunk can return the chunk's online-softmax
+# statistics (m, l, acc) instead of the pages themselves; the host merges
+# any number of such triples into the exact full-context attention output.
+# These are the host-side reference halves of that protocol: the same
+# (max, denominator, accumulator) carry the pallas kernel above keeps in
+# VMEM scratch, exposed as a pure-numpy pair so chunk splits are testable
+# against the monolithic kernel.
+
+AttnPartial = Tuple[np.ndarray, np.ndarray, np.ndarray]   # (m, l, acc)
+
+_MASKED = -1e30     # matches the kernel's out-of-range fill (never NaNs)
+
+
+def attention_partial(q: np.ndarray, k: np.ndarray, v: np.ndarray,
+                      valid_len: Optional[int] = None,
+                      scale: Optional[float] = None) -> AttnPartial:
+    """Online-softmax statistics of ONE KV chunk for one decode step.
+
+    ``q``: (B, H, hd); ``k``/``v``: (B, S, KV, hd) (any dtype castable
+    to f32; GQA repeat handled like the kernel).  Returns ``(m, l,
+    acc)`` — running max (B, H), denominator (B, H) and unnormalized
+    accumulator (B, H, hd) — such that ``acc / l`` is the chunk-local
+    attention output and chunks merge EXACTLY via
+    :func:`combine_partials`.  ``valid_len`` masks slots past it with
+    the kernel's finite fill."""
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k).astype(np.float32)
+    v = np.asarray(v).astype(np.float32)
+    B, H, hd = q.shape
+    groups = H // k.shape[2]
+    kx = np.repeat(k, groups, axis=2)             # (B, S, H, hd)
+    vx = np.repeat(v, groups, axis=2)
+    s = np.einsum("bhd,bshd->bhs", q, kx) * (
+        (1.0 / hd ** 0.5) if scale is None else scale)
+    if valid_len is not None:
+        pos = np.arange(k.shape[1])
+        s = np.where(pos[None, None, :] < valid_len, s, _MASKED)
+    m = s.max(axis=-1)                            # (B, H)
+    p = np.exp(s - m[..., None])
+    l = p.sum(axis=-1)                            # noqa: E741 — flash notation
+    acc = np.einsum("bhs,bshd->bhd", p, vx)
+    return m, l, acc
+
+
+def combine_partials(parts: Sequence[AttnPartial]) -> np.ndarray:
+    """Merge per-chunk ``(m, l, acc)`` triples into the full-context
+    attention output (B, H, hd) f32 — the associative online-softmax
+    merge (rescale both sides to the joint max, add).  Splitting a
+    context into ANY chunking and combining reproduces the monolithic
+    result exactly up to f32 rounding (tested against
+    :func:`decode_attention_pallas`)."""
+    m, l, acc = parts[0]
+    for m2, l2, acc2 in parts[1:]:
+        m_new = np.maximum(m, m2)
+        c1 = np.exp(m - m_new)
+        c2 = np.exp(m2 - m_new)
+        l = l * c1 + l2 * c2
+        acc = acc * c1[..., None] + acc2 * c2[..., None]
+        m = m_new
+    return acc / l[..., None]

@@ -1,0 +1,152 @@
+"""PNM page-scoring kernel: device-side top-k candidate ranking.
+
+The processing-near-memory read mode (``core.tier.GatherReq``) scores
+every spilled KV page against a host-supplied query digest ON the
+device, then ships full precision for only the top-k winners.  Scoring
+runs on a *plane subset* — the gather's ``score_view`` defaults to
+``MAN0`` (sign + full exponent + one guard mantissa plane), so the
+score fetch touches a fraction of each page's stored planes — and this
+module turns those reduced-precision rows into one float32 score per
+page:
+
+    score(page) = max over valid token rows t of  <row_t, digest>
+
+(the max-dot proxy for the page's attention mass against the digest —
+the dynamic-placement literature's top-k page selection signal).
+
+Twin implementations, mirroring ``kernels/lz4.py`` / ``bitplane.py``:
+
+* ``page_scores_pallas`` — a pallas kernel (one grid step per page; the
+  masked dot+max reduction stays in VMEM), compiled on TPU/GPU and run
+  in interpret mode for the CPU parity tests;
+* the vectorized-numpy twin inside :func:`page_scores` — the CPU
+  production path the tier device calls.
+
+Determinism: winner selection must be bit-stable across sync/async
+submission and shard counts, so :func:`topk_select` ranks by
+(-score, candidate position) — equal scores break toward the earlier
+candidate in the host-chosen key order, never by float reduction
+accident.  The tie-break is exercised by the determinism tests with
+byte-identical duplicate pages.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _accel_backend() -> str:
+    try:
+        return jax.default_backend()
+    except RuntimeError:  # pragma: no cover - no runtime available
+        return "cpu"
+
+
+def u16_rows_to_f32(u16: np.ndarray, channels: int) -> np.ndarray:
+    """Reinterpret a device payload (uint16 bf16 bit patterns) as
+    ``(tokens, channels)`` float32 rows for scoring."""
+    import ml_dtypes
+
+    flat = np.ascontiguousarray(np.asarray(u16, dtype=np.uint16)).ravel()
+    if flat.size % channels:
+        raise ValueError(
+            f"page of {flat.size} elems does not factor into "
+            f"{channels}-channel rows"
+        )
+    return (flat.view(ml_dtypes.bfloat16)
+            .astype(np.float32)
+            .reshape(-1, channels))
+
+
+def _score_kernel(valid_ref, digest_ref, page_ref, out_ref):
+    """One grid step scores one page: masked row-dot + max in VMEM."""
+    page = page_ref[0]                    # (T, C) f32
+    digest = digest_ref[0]                # (C,) f32
+    v = valid_ref[0, 0]                   # valid token rows
+    dots = jnp.sum(page * digest[None, :], axis=-1)       # (T,)
+    t_ix = jax.lax.broadcasted_iota(jnp.int32, dots.shape, 0)
+    out_ref[0] = jnp.max(jnp.where(t_ix < v, dots, -jnp.inf))
+
+
+def page_scores_pallas(padded: jnp.ndarray, valid: jnp.ndarray,
+                       digest: jnp.ndarray,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(P, T, C) f32 pages + (P,) valid lens + (C,) digest → (P,) f32."""
+    P, T, C = padded.shape
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((1, T, C), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        interpret=interpret,
+    )(valid.reshape(P, 1).astype(jnp.int32),
+      digest.reshape(1, C).astype(jnp.float32),
+      padded.astype(jnp.float32))
+
+
+def page_scores(padded: np.ndarray, valid: np.ndarray, digest: np.ndarray,
+                force: str | None = None) -> np.ndarray:
+    """Score a padded page stack: ``(P, T, C)`` f32 rows (rows past
+    ``valid[p]`` ignored) against a ``(C,)`` digest → ``(P,)`` f32.
+
+    Pages with zero valid rows score ``-inf`` (they rank last, ties by
+    candidate position).  ``force``: ``"numpy"`` pins the vectorized
+    twin, ``"pallas"`` pins the kernel (interpret mode off-accelerator).
+    """
+    padded = np.asarray(padded, dtype=np.float32)
+    valid = np.asarray(valid, dtype=np.int64)
+    digest = np.asarray(digest, dtype=np.float32)
+    P, T, C = padded.shape
+    if P == 0 or T == 0:
+        return np.full((P,), -np.inf, dtype=np.float32)
+    backend = _accel_backend()
+    use_pallas = (force == "pallas"
+                  or (force is None and backend in ("tpu", "gpu")))
+    if use_pallas:
+        out = page_scores_pallas(
+            jnp.asarray(padded), jnp.asarray(valid), jnp.asarray(digest),
+            interpret=backend not in ("tpu", "gpu"),
+        )
+        return np.asarray(out, dtype=np.float32)
+    dots = padded @ digest                                # (P, T)
+    mask = np.arange(T)[None, :] < valid[:, None]
+    return np.where(mask, dots, -np.inf).max(axis=1).astype(np.float32)
+
+
+def page_scores_u16(pages: Sequence[np.ndarray], digest: np.ndarray,
+                    force: str | None = None) -> np.ndarray:
+    """Score raw device payloads: each page is a uint16 (bf16-pattern)
+    array whose elements factor into ``digest.size``-channel rows.
+    Ragged pages are padded to the longest and masked."""
+    digest = np.asarray(digest, dtype=np.float32)
+    if not pages:
+        return np.zeros((0,), dtype=np.float32)
+    rows = [u16_rows_to_f32(p, digest.size) for p in pages]
+    valid = np.array([r.shape[0] for r in rows], dtype=np.int64)
+    T = max(1, int(valid.max()))
+    padded = np.zeros((len(rows), T, digest.size), dtype=np.float32)
+    for i, r in enumerate(rows):
+        padded[i, : r.shape[0]] = r
+    return page_scores(padded, valid, digest, force=force)
+
+
+def topk_select(scores: np.ndarray, k: int) -> List[int]:
+    """Deterministic top-k: descending score, ties broken by candidate
+    position (stable across shard counts and sync/async paths).  ``k``
+    past the candidate count clamps; ``k=0`` selects nothing."""
+    scores = np.asarray(scores)
+    n = scores.size
+    if n == 0 or k <= 0:
+        return []
+    order = np.lexsort((np.arange(n), -scores))
+    return [int(i) for i in order[: min(k, n)]]

@@ -81,6 +81,15 @@ serving modes (and the benchmark figure each corresponds to):
                          [--prefix-share]          shared-prefix KV reuse
                          [--share-prefix-len N]
 
+  Every mode accepts --pnm-topk K: spill readback becomes a processing-
+  near-memory gather — the device scores spilled pages on a reduced
+  plane subset (sign + exponent + one guard mantissa plane) against the
+  current query digest and ships full precision for only the top-K, so
+  link bytes per boundary are O(K·page) instead of O(spilled·page).
+  K >= spilled pages is bit-identical to the classic readback.
+  --importance attention feeds measured attention mass into page
+  ranking (residency, spill views) instead of commit recency.
+
   Every mode accepts --shards N (with --placement P): the tier becomes a
   ShardedTierStore fleet of N devices, each with its own LinkModel pipes
   and busy clock.  hash-stripe spreads each request's pages across the
@@ -125,6 +134,8 @@ def serve(
     sanitize: bool | None = None,
     shards: int | None = None,
     placement: str | None = None,
+    pnm_topk: int | None = None,
+    importance: str = "recency",
 ):
     cfg = ARCHS[arch]
     if smoke:
@@ -139,6 +150,8 @@ def serve(
         policy=policy,
         async_io=async_io,
         sanitize=sanitize,
+        pnm_topk=pnm_topk,
+        importance=importance,
     )
     # Build the (possibly sharded) device up front so the solo-engine
     # path honors --shards/--placement the same way MultiStreamEngine
@@ -166,6 +179,9 @@ def serve(
         print(f"[serve] aggregate tok/s ceiling: {eng.throughput_ceiling():.1f}")
         return eng, toks
     eng = ServeEngine(cfg, params, device_kind=dev, **kw)
+    if pnm_topk is not None:
+        print(f"[serve] PNM read mode: device-side top-{pnm_topk} gather "
+              f"per KV kind per boundary (importance={importance})")
     prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     toks = eng.generate(prompt, n_tokens)
     s = eng.stats()
@@ -207,6 +223,8 @@ def serve_continuous(
     placement: str | None = None,
     slo_ttft_s: float | None = None,
     slo_tpot_s: float | None = None,
+    pnm_topk: int | None = None,
+    importance: str = "recency",
 ):
     """Continuous-batching mode: run a synthetic arrival trace through the
     ServeScheduler and report throughput + latency percentiles."""
@@ -228,6 +246,7 @@ def serve_continuous(
         async_io=async_io, sanitize=sanitize,
         shards=shards, placement=placement,
         slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
+        pnm_topk=pnm_topk, importance=importance,
     )
     rep = sched.run(trace)
     d = sched.device_stats()
@@ -286,6 +305,17 @@ def main():
                     help="sequences sharing one tier device queue")
     ap.add_argument("--sync-io", action="store_true",
                     help="serialize spill readback (disable the async queue)")
+    ap.add_argument("--pnm-topk", type=int, default=None,
+                    help="PNM read mode: device-side top-K gather replaces "
+                         "full spill readback — the device scores spilled "
+                         "pages on the reduced score_view plane subset and "
+                         "ships only the K winners (K >= spilled pages is "
+                         "bit-identical to the classic path); default off")
+    ap.add_argument("--importance", default="recency",
+                    choices=["recency", "attention"],
+                    help="page-importance signal: commit recency (default) "
+                         "or accumulated attention mass fed through "
+                         "KVPagePool.update_importance each boundary")
     ap.add_argument("--lossless-only", action="store_true")
     ap.add_argument("--num-requests", type=int, default=0,
                     help="run the continuous-batching scheduler on a "
@@ -381,6 +411,7 @@ def main():
                         if args.slo_ttft_ms is not None else None),
             slo_tpot_s=(args.slo_tpot_ms / 1e3
                         if args.slo_tpot_ms is not None else None),
+            pnm_topk=args.pnm_topk, importance=args.importance,
         )
         return
     if args.slo_ttft_ms is not None or args.slo_tpot_ms is not None:
@@ -395,7 +426,8 @@ def main():
           streams=args.streams, async_io=not args.sync_io,
           lossless_only=args.lossless_only,
           sanitize=args.sanitize or None,
-          shards=args.shards or None, placement=args.placement)
+          shards=args.shards or None, placement=args.placement,
+          pnm_topk=args.pnm_topk, importance=args.importance)
 
 
 if __name__ == "__main__":

@@ -47,13 +47,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.precision import FULL, MAN0, MAN2, MAN4, PrecisionView
 from ..core.tier import (
-    KV, ReadReq, Receipt, Ticket, TierStore, WriteReq, make_device,
+    GatherReq, KV, ReadReq, Receipt, Ticket, TierStore, WriteReq, make_device,
 )
 
 
@@ -200,6 +201,7 @@ class _Page:
     degrade_level: int = -1   # last degradation-ladder rung applied
     share_hash: Optional[str] = None  # prefix chain hash (shareable window)
     shared_ref: bool = False  # this pool holds a ledger ref on a shared key
+    gather_view: Optional[PrecisionView] = None  # frozen PNM winner view
 
 
 @dataclasses.dataclass
@@ -211,6 +213,7 @@ class PageTraffic:
     link_bytes_in: int = 0
     link_bytes_out: int = 0
     index_bytes: int = 0
+    device_compute_s: float = 0.0
     requests: int = 0
 
     def add(self, r: Receipt):
@@ -232,6 +235,10 @@ class KVPagePool:
     exactly the stream a real host would store through CXL.mem.
     """
 
+    # Importance-feedback bookkeeping: scores submitted for keys this
+    # pool does not track (see update_importance).
+    unknown_importance_keys: int = 0
+
     def __init__(
         self,
         device: TierStore | str = "trace",
@@ -242,6 +249,7 @@ class KVPagePool:
         degrade_ladder: Sequence[PrecisionView] = (),
         sanitize: Optional[bool] = None,
         prefix_index: Optional[PrefixShareIndex] = None,
+        strict_importance: bool = False,
     ):
         self.device = (make_device(device, sanitize=sanitize)
                        if isinstance(device, str) else device)
@@ -257,6 +265,11 @@ class KVPagePool:
                 "them on"
             )
         self.prefix_index = prefix_index
+        # Importance-score hygiene (see update_importance): unknown keys
+        # are counted (and warned about once); strict mode raises.
+        self.strict_importance = strict_importance
+        self.unknown_importance_keys = 0
+        self._warned_unknown_importance = False
         self._pages: List[_Page] = []
         self._commit_clock = 0              # commit boundaries seen (page LRU)
         self._hbm_used = 0
@@ -368,7 +381,36 @@ class KVPagePool:
             self.prefix_index.register(p.share_hash, p.layer, p.kind, p.key)
             p.shared_ref = True
 
-    def update_importance(self, scores: Dict[str, float]):
+    def update_importance(self, scores: Dict[str, float],
+                          strict: Optional[bool] = None):
+        """Re-rank pages by externally measured importance (attention
+        mass from the serving engine, see ``ServeEngine``'s
+        ``importance="attention"`` mode), then rebalance residency.
+
+        Scores for keys this pool does not track (retired pages, typo'd
+        namespaces) used to be dropped silently, quietly skewing
+        reclamation; they are now counted in
+        ``unknown_importance_keys`` and warned about once per pool.
+        Strict mode (the ``strict`` argument, defaulting to the pool's
+        ``strict_importance`` flag) raises ``KeyError`` instead, so
+        stale-key bugs surface at the call site."""
+        unknown = [k for k in scores
+                   if k not in {p.key for p in self._pages}]
+        if unknown:
+            self.unknown_importance_keys += len(unknown)
+            if self.strict_importance if strict is None else strict:
+                raise KeyError(
+                    f"importance scores for {len(unknown)} unknown page "
+                    f"key(s), e.g. {sorted(unknown)[:3]}"
+                )
+            if not self._warned_unknown_importance:
+                self._warned_unknown_importance = True
+                warnings.warn(
+                    f"update_importance dropped scores for {len(unknown)} "
+                    f"unknown page key(s) (e.g. {sorted(unknown)[:3]}); "
+                    "see KVPagePool.unknown_importance_keys",
+                    stacklevel=2,
+                )
         for p in self._pages:
             if p.key in scores:
                 p.importance = scores[p.key]
@@ -413,6 +455,79 @@ class KVPagePool:
         read here would have.
         """
         return self.device.submit_async(self._page_reqs(pages))
+
+    # -- PNM read path: device-side top-k gather -------------------------------
+    def _gather_req(self, pages: Sequence[_Page], digest: np.ndarray,
+                    k: int) -> GatherReq:
+        """Build one :class:`GatherReq` over ``pages``.
+
+        Each candidate's full-precision winner view is FROZEN at its
+        first gather — the policy view at the spill ranks of that moment,
+        exactly the view the classic readback (:meth:`read_pages`) would
+        have issued for the page at its spill boundary.  Later rank
+        drift therefore never changes the bytes a winner ships, which is
+        what keeps ``k >= len(candidates)`` bit-identical to the full
+        readback path across sync/async submission and shard counts."""
+        rank = None
+        for p in pages:
+            if p.gather_view is None:
+                if rank is None:
+                    rank = self._spill_ranks()
+                p.gather_view = self.policy.view_for_rank(rank[p.key])
+        return GatherReq(
+            keys=tuple(p.key for p in pages),
+            digest=np.asarray(digest, dtype=np.float32),
+            k=int(k),
+            kind=KV,
+            views=tuple(p.gather_view for p in pages),
+            tag=pages[0].key,
+        )
+
+    def gather_topk(self, digest: np.ndarray, k: int,
+                    pages: Optional[Sequence[_Page]] = None,
+                    ) -> Tuple[List[_Page], List[np.ndarray]]:
+        """Device-side top-k over spilled pages — the PNM replacement for
+        full spill readback.  ONE ``GatherReq`` scores every candidate on
+        the reduced ``score_view`` plane subset against ``digest`` and
+        ships full (frozen-view) precision for only the ``k`` winners, so
+        link bytes are O(k · page) + one score-plane pass instead of
+        O(candidates · page).  Returns ``(winner_pages, data)`` in score
+        order; ``k >= len(candidates)`` returns every candidate's exact
+        :meth:`read_pages` bytes (tested differential)."""
+        cands = [p for p in (pages if pages is not None else self._pages)
+                 if p.resident is None]
+        if not cands:
+            return [], []
+        rec = self.device.submit([self._gather_req(cands, digest, k)])[0]
+        self._account([rec])
+        by_key = {p.key: p for p in cands}
+        return [by_key[kk] for kk in rec.gather.keys], rec.gather.data
+
+    def gather_topk_async(self, digest: np.ndarray, k: int,
+                          pages: Optional[Sequence[_Page]] = None,
+                          ) -> Tuple[List[_Page], Optional[Ticket]]:
+        """Issue :meth:`gather_topk` through the async front-end: the
+        gather rides the device's in-flight window across the next decode
+        step.  Returns ``(candidates, ticket)`` for :meth:`drain_gather`
+        (``([], None)`` when nothing is spilled)."""
+        cands = [p for p in (pages if pages is not None else self._pages)
+                 if p.resident is None]
+        if not cands:
+            return [], None
+        ticket = self.device.submit_async(
+            [self._gather_req(cands, digest, k)])[0]
+        return cands, ticket
+
+    def drain_gather(self, cands: Sequence[_Page], ticket: Optional[Ticket],
+                     ) -> Tuple[List[_Page], List[np.ndarray]]:
+        """Wait one gather ticket, fold its receipt into pool traffic,
+        and map the winners back to pages → ``(winner_pages, data)``."""
+        if ticket is None:
+            return [], []
+        rec = ticket.wait()
+        self._account([rec])
+        by_key = {p.key: p for p in cands}
+        return [by_key[kk] for kk in rec.gather.keys], rec.gather.data
 
     def drain_reads(self, tickets: Sequence[Ticket]) -> List[np.ndarray]:
         """Wait on readback tickets, folding receipts into pool traffic.
@@ -653,6 +768,12 @@ class KVPagePool:
     @property
     def spilled_pages(self) -> int:
         return sum(1 for p in self._pages if p.resident is None)
+
+    def iter_pages(self) -> Tuple[_Page, ...]:
+        """All committed pages in commit order — the public view engines
+        and benchmarks rank/gather over.  The returned handles are the
+        same objects ``read_pages`` / ``gather_topk`` accept."""
+        return tuple(self._pages)
 
     def stats(self):
         self.settle_prefetched()

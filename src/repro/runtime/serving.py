@@ -65,7 +65,7 @@ from ..core.tier import Ticket, TierStore, make_device
 from ..models import decode_step, forward, init_cache
 from .paging import (
     KVPagePool, PagePolicy, PAPER_POLICY, PrefixShareIndex, _Page,
-    prefix_chain_hashes,
+    prefix_chain_hashes, shared_page_key,
 )
 
 # One jitted step per distinct (frozen, hashable) ArchConfig, shared by
@@ -97,6 +97,7 @@ class ServeStats:
     kv_logical_bytes: int = 0
     tier_io_service_s: float = 0.0      # serialized service time of all I/O
     tier_io_queue_delay_s: float = 0.0  # queueing on the shared DDR/link pipes
+    tier_device_compute_s: float = 0.0  # PNM scoring time on the device
 
     @property
     def kv_compression_ratio(self) -> float:
@@ -123,14 +124,30 @@ class ServeEngine:
         async_io: bool = True,
         sanitize: Optional[bool] = None,
         prefix_index: Optional[PrefixShareIndex] = None,
+        pnm_topk: Optional[int] = None,
+        importance: str = "recency",
     ):
         assert not cfg.is_encoder_only, "serving needs a decoder"
+        if importance not in ("recency", "attention"):
+            raise ValueError(f"unknown importance mode {importance!r}")
+        if pnm_topk is not None and pnm_topk < 0:
+            raise ValueError("pnm_topk must be >= 0 (or None to disable)")
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
         self.page_tokens = page_tokens
         self.async_io = async_io
+        # PNM read mode: spill readback becomes a device-side top-k
+        # gather (one GatherReq per KV kind per boundary) — only the k
+        # highest-scoring spilled pages ship back.  k >= spilled pages
+        # degenerates to the full readback bit-for-bit.
+        self.pnm_topk = pnm_topk
+        # "recency" keeps the pre-existing commit-order ranking;
+        # "attention" accumulates digest-proxy attention mass per page
+        # each commit boundary and feeds pool.update_importance.
+        self.importance = importance
+        self._imp_acc: Dict[str, float] = {}
         self.pool = KVPagePool(
             device_kind, page_tokens, hbm_kv_budget, policy,
             key_prefix=key_prefix, sanitize=sanitize,
@@ -144,6 +161,7 @@ class ServeEngine:
         self._share_hashes: List[str] = []
         self._prompt_len = 0
         self._inflight: List[Tuple[_Page, Ticket]] = []
+        self._inflight_gathers: List[Tuple[List[_Page], Ticket]] = []
         self._decode = lambda p, b, c: _jit_step(cfg, p, b, c)
         self._prefill = self._decode
 
@@ -181,12 +199,16 @@ class ServeEngine:
                     page = buf[layer, :, start : start + self.page_tokens]
                     tok = page.reshape(self.page_tokens * self.batch, -1)
                     u16 = np.ascontiguousarray(tok).view(np.uint16)
-                    # recency as default importance; attention-mass updates
-                    # arrive via pool.update_importance
+                    # recency as default importance; importance="attention"
+                    # replaces it below with accumulated attention mass and
+                    # keeps re-ranking live pages via
+                    # pool.update_importance every boundary
                     batch_pages.append(
                         (layer, kind, start, u16, float(start), share)
                     )
         if batch_pages:
+            if self.importance == "attention":
+                batch_pages = self._apply_attention_importance(batch_pages)
             self.pool.append_pages(batch_pages)
         self._issue_readback()
 
@@ -202,6 +224,9 @@ class ServeEngine:
         events, self.pool.spill_events = self.pool.spill_events, []
         if not events:
             return
+        if self.pnm_topk is not None:
+            self._issue_gather(events)
+            return
         if self.async_io:
             self._inflight.extend(
                 zip(events, self.pool.read_pages_async(events))
@@ -209,14 +234,126 @@ class ServeEngine:
         else:
             self._apply_readback(events, self.pool.read_pages(events))
 
+    def _issue_gather(self, events: Sequence[_Page]):
+        """PNM read mode: replace the boundary's full spill readback with
+        one device-side top-k gather per KV kind.
+
+        The device scores every candidate page on the reduced
+        ``score_view`` plane subset against this step's query digest and
+        ships full precision for only the ``pnm_topk`` winners; losers
+        keep their pristine HBM values in the jnp cache (the overlap
+        contract: PNM hides degradation, never adds it).  With
+        ``pnm_topk >= len(events)`` every candidate wins and the applied
+        bytes are identical to the classic readback."""
+        by_kind: Dict[str, List[_Page]] = {}
+        for p in events:
+            by_kind.setdefault(p.kind, []).append(p)
+        for kind, pages in by_kind.items():
+            digest = self._query_digest(kind)
+            if self.async_io:
+                cands, ticket = self.pool.gather_topk_async(
+                    digest, self.pnm_topk, pages)
+                if ticket is not None:
+                    self._inflight_gathers.append((cands, ticket))
+            else:
+                winners, data = self.pool.gather_topk(
+                    digest, self.pnm_topk, pages)
+                self._apply_readback(winners, data)
+
     def flush_io(self):
         """Drain in-flight readback tickets and fold them into the cache."""
-        if not self._inflight:
+        if not self._inflight and not self._inflight_gathers:
             return
         inflight, self._inflight = self._inflight, []
-        pages = [p for p, _ in inflight]
-        data = self.pool.drain_reads([t for _, t in inflight])
-        self._apply_readback(pages, data)
+        gathers, self._inflight_gathers = self._inflight_gathers, []
+        if inflight:
+            pages = [p for p, _ in inflight]
+            data = self.pool.drain_reads([t for _, t in inflight])
+            self._apply_readback(pages, data)
+        for cands, ticket in gathers:
+            winners, data = self.pool.drain_gather(cands, ticket)
+            self._apply_readback(winners, data)
+
+    def _query_digest(self, kind: str) -> np.ndarray:
+        """f32 mean of the last committed window's rows for ``kind`` —
+        the host-side stand-in for the current query direction that both
+        the PNM gather and attention-mass importance score against."""
+        buf = np.asarray(self.cache["layers"][kind])
+        channels = int(np.prod(buf.shape[3:])) if buf.ndim > 3 else 1
+        lo = max(0, self.pos - self.page_tokens)
+        win = buf[:, :, lo:self.pos]
+        if win.size == 0:
+            return np.zeros((channels,), np.float32)
+        return win.astype(np.float32).reshape(-1, channels).mean(axis=0)
+
+    def _attention_masses(self) -> Dict[Tuple[str, int, int], float]:
+        """Digest-proxy attention mass per committed page window.
+
+        For each key-bearing kind (``k`` / ``c_kv``), every committed
+        token row is scored ``<row, digest>`` and softmaxed across the
+        layer's whole committed context; a window's mass is the sum of
+        its rows' probabilities — the share of attention the current
+        query direction would spend on that page.  Keyed by
+        ``(kind, layer, start)``; V pages inherit their K twin's mass
+        (values move under the weights keys produce)."""
+        layers = self.cache.get("layers", {})
+        paged = (self.pos // self.page_tokens) * self.page_tokens
+        masses: Dict[Tuple[str, int, int], float] = {}
+        if paged <= 0:
+            return masses
+        for kind in ("k", "c_kv"):
+            if kind not in layers:
+                continue
+            buf = np.asarray(layers[kind])
+            digest = self._query_digest(kind)
+            n_layers = buf.shape[0]
+            for layer in range(n_layers):
+                rows = (buf[layer][:, :paged].astype(np.float32)
+                        .reshape(self.batch, paged, -1))
+                dots = rows @ digest                      # (B, paged)
+                p = np.exp(dots - dots.max())
+                p /= p.sum()
+                for start in range(0, paged, self.page_tokens):
+                    masses[(kind, layer, start)] = float(
+                        p[:, start : start + self.page_tokens].sum())
+        return masses
+
+    def _apply_attention_importance(self, batch_pages: List[tuple]) -> List[tuple]:
+        """Satellite of the PNM PR: make ``pool.update_importance`` have
+        a real caller.  Accumulates this boundary's attention masses into
+        the per-key running totals, re-ranks the pool's live pages, and
+        rewrites the fresh commit batch so new pages are admitted at
+        their measured mass instead of recency."""
+        masses = self._attention_masses()
+        if not masses:
+            return batch_pages
+
+        def _mass(kind: str, layer: int, start: int) -> Optional[float]:
+            src = "k" if kind in ("k", "v") else kind
+            return masses.get((src, layer, start))
+
+        for p in self.pool.iter_pages():
+            m = _mass(p.kind, p.layer, p.start)
+            if m is not None:
+                self._imp_acc[p.key] = self._imp_acc.get(p.key, 0.0) + m
+        known = {p.key for p in self.pool.iter_pages()}
+        scores = {k: v for k, v in self._imp_acc.items() if k in known}
+        if scores:
+            self.pool.update_importance(scores)
+        out = []
+        for entry in batch_pages:
+            layer, kind, start, u16, imp = entry[:5]
+            share = entry[5] if len(entry) > 5 else None
+            if share is not None and self.pool.prefix_index is not None:
+                key = shared_page_key(share, layer, kind)
+            else:
+                key = f"{self.pool.key_prefix}L{layer}.{kind}.{start}"
+            m = _mass(kind, layer, start)
+            if m is not None:
+                self._imp_acc[key] = self._imp_acc.get(key, 0.0) + m
+                imp = self._imp_acc[key]
+            out.append((layer, kind, start, u16, imp, share))
+        return out
 
     def _apply_readback(self, pages: Sequence[_Page],
                         data: Sequence[np.ndarray]):
@@ -310,6 +447,7 @@ class ServeEngine:
             kv_logical_bytes=d.raw_bytes_stored + self.pool.hbm_bytes,
             tier_io_service_s=self.pool.io_service_s,
             tier_io_queue_delay_s=self.pool.io_queue_delay_s,
+            tier_device_compute_s=d.device_compute_s,
         )
 
     def throughput_ceiling(self, sys: SystemSpec = SystemSpec()) -> float:
@@ -763,6 +901,8 @@ class ServeScheduler:
         slo_tpot_s: Optional[float] = None,
         shards: Optional[int] = None,
         placement: Optional[str] = None,
+        pnm_topk: Optional[int] = None,
+        importance: str = "recency",
     ):
         from .paging import PAPER_POLICY as _paper
 
@@ -802,6 +942,10 @@ class ServeScheduler:
         # reporting statistic, not an admission signal
         self.slo_ttft_s = slo_ttft_s
         self.slo_tpot_s = slo_tpot_s
+        # PNM read mode + importance signal, threaded into every engine
+        # this scheduler starts.
+        self.pnm_topk = pnm_topk
+        self.importance = importance
         # Shared-prefix KV reuse: one content-addressed index across every
         # engine this scheduler starts.  Identical prompt-prefix pages are
         # stored once (refcounted), and admission charges each request only
@@ -1068,6 +1212,7 @@ class ServeScheduler:
             device_kind=self.device, policy=self.policy,
             key_prefix=f"r{req.req_id}.", async_io=self.async_io,
             prefix_index=self.prefix_index,
+            pnm_topk=self.pnm_topk, importance=self.importance,
         )
         rec.admit_step = self.clock
         rec.t_admit_s = self.model_time_s

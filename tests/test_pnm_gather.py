@@ -1,0 +1,399 @@
+"""PNM read path: device-side top-k gather over bit-planes.
+
+Contract under test, bottom-up:
+
+* scoring kernel (``kernels.pnm_score``): pallas/numpy twins agree,
+  tie-breaking is positional and deterministic;
+* partial-attention algebra (``kernels.decode_attn``): chunked
+  online-softmax statistics merge to the monolithic kernel's output;
+* tier protocol (``core.tier.GatherReq``): a gather whose ``k`` covers
+  every candidate is byte-identical to individual reads, winners are
+  identical across sync/async submission and shard counts, and
+  ``device_compute_s`` obeys receipt/aggregate conservation;
+* pool (``KVPagePool.gather_topk``): frozen winner views, async parity,
+  importance-feedback bookkeeping;
+* engine (``ServeEngine(pnm_topk=...)``): decode tokens bit-identical
+  to the classic readback when ``k`` covers the spill, bounded ``k``
+  cuts link traffic, attention-mass importance wires end to end.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import synth
+from repro.core.precision import FULL, SCORE
+from repro.core.tier import (
+    KV,
+    LAYOUTS,
+    GatherReq,
+    ReadReq,
+    TierStore,
+    WriteReq,
+    make_device,
+)
+from repro.kernels.pnm_score import page_scores, page_scores_u16, topk_select
+
+CH = 64          # KV channels for the tier-level tests
+ROWS = 32        # tokens per written stream
+
+
+def _write_pages(dev, n=6, seed=0):
+    """n KV streams of (ROWS, CH) on ``dev``; returns their keys."""
+    kv = synth.kv_cache(ROWS * n, CH, seed=seed)
+    keys = [f"p{i}" for i in range(n)]
+    dev.submit([
+        WriteReq(k, kv[i * ROWS:(i + 1) * ROWS], kind=KV)
+        for i, k in enumerate(keys)
+    ])
+    return keys
+
+
+def _gather(keys, digest, k, views=None):
+    return GatherReq(keys=tuple(keys), digest=digest, k=k, kind=KV,
+                     views=views)
+
+
+# ---------------------------------------------------------------------------
+# Scoring kernel
+# ---------------------------------------------------------------------------
+
+def test_page_scores_pallas_matches_numpy():
+    rng = np.random.default_rng(0)
+    padded = rng.normal(size=(5, 16, CH)).astype(np.float32)
+    valid = np.array([16, 9, 1, 16, 0])
+    digest = rng.normal(size=CH).astype(np.float32)
+    a = page_scores(padded, valid, digest, force="numpy")
+    b = page_scores(padded, valid, digest, force="pallas")
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    assert a[4] == -np.inf  # zero valid rows rank last
+
+
+def test_topk_select_positional_tie_break():
+    scores = np.array([1.0, 3.0, 3.0, 0.5, 3.0])
+    assert topk_select(scores, 3) == [1, 2, 4]   # ties by position
+    assert topk_select(scores, 0) == []
+    assert topk_select(scores, 99) == [1, 2, 4, 0, 3]
+    assert topk_select(np.array([]), 4) == []
+
+
+def test_page_scores_u16_ragged_pages():
+    kv = synth.kv_cache(24, CH, seed=3)
+    pages = [kv[:16], kv[16:]]                    # 16 and 8 rows
+    digest = np.ones(CH, np.float32)
+    s = page_scores_u16(pages, digest)
+    assert s.shape == (2,) and np.all(np.isfinite(s))
+
+
+# ---------------------------------------------------------------------------
+# Partial attention algebra
+# ---------------------------------------------------------------------------
+
+def test_combine_partials_matches_monolithic_kernel():
+    from repro.kernels.decode_attn import (
+        attention_partial, combine_partials, decode_attention_pallas,
+    )
+
+    rng = np.random.default_rng(1)
+    B, H, KVH, hd, S = 2, 4, 2, 32, 64
+    q = rng.normal(size=(B, H, hd)).astype(np.float32)
+    k = rng.normal(size=(B, S, KVH, hd)).astype(np.float32)
+    v = rng.normal(size=(B, S, KVH, hd)).astype(np.float32)
+
+    import jax.numpy as jnp
+    ref = np.asarray(decode_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), S, block_s=32))
+
+    for cuts in ([64], [32, 32], [8, 24, 16, 16]):
+        parts, off = [], 0
+        for c in cuts:
+            parts.append(attention_partial(
+                q, k[:, off:off + c], v[:, off:off + c]))
+            off += c
+        out = combine_partials(parts)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_partial_valid_len_masks_tail():
+    from repro.kernels.decode_attn import attention_partial, combine_partials
+
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(1, 2, 16)).astype(np.float32)
+    k = rng.normal(size=(1, 8, 2, 16)).astype(np.float32)
+    v = rng.normal(size=(1, 8, 2, 16)).astype(np.float32)
+    full = combine_partials([attention_partial(q, k[:, :5], v[:, :5])])
+    masked = combine_partials([attention_partial(q, k, v, valid_len=5)])
+    np.testing.assert_allclose(full, masked, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Tier protocol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_gather_full_k_byte_identical_to_reads(layout):
+    """k >= candidates ⇒ the gather ships exactly the bytes individual
+    ReadReqs at the same views would, on every storage layout."""
+    dev = TierStore(layout=layout, kv_window=ROWS, sanitize=True)
+    keys = _write_pages(dev)
+    digest = np.ones(CH, np.float32)
+
+    rec, = dev.submit([_gather(keys, digest, k=len(keys) + 3)])
+    assert sorted(rec.gather.keys) == sorted(keys)
+    plain = {k: r.data for k, r in zip(
+        keys, dev.submit([ReadReq(k, kind=KV) for k in keys]))}
+    for k, data in zip(rec.gather.keys, rec.gather.data):
+        np.testing.assert_array_equal(data, plain[k])
+
+
+def test_gather_sync_async_identical():
+    digest = np.linspace(-1, 1, CH).astype(np.float32)
+    dev_s = make_device("trace", shards=1, sanitize=True)
+    dev_a = make_device("trace", shards=1, sanitize=True)
+    keys = _write_pages(dev_s)
+    _write_pages(dev_a)
+
+    rec_s, = dev_s.submit([_gather(keys, digest, k=3)])
+    t, = dev_a.submit_async([_gather(keys, digest, k=3)])
+    rec_a = t.wait()
+
+    assert rec_s.gather.keys == rec_a.gather.keys
+    np.testing.assert_array_equal(rec_s.gather.scores, rec_a.gather.scores)
+    for a, b in zip(rec_s.gather.data, rec_a.gather.data):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("k", [0, 2, 9])
+def test_gather_sharded_matches_solo(k):
+    """Per-shard local top-k + host merge == one device's global top-k,
+    for bounded, zero and covering k."""
+    digest = np.linspace(-1, 1, CH).astype(np.float32)
+    solo = make_device("trace", shards=1, sanitize=True)
+    fleet = make_device("trace", shards=4, sanitize=True)
+    keys = _write_pages(solo)
+    _write_pages(fleet)
+
+    r1, = solo.submit([_gather(keys, digest, k=k)])
+    r4, = fleet.submit([_gather(keys, digest, k=k)])
+    assert r1.gather.keys == r4.gather.keys
+    assert r1.gather.indices == r4.gather.indices
+    np.testing.assert_array_equal(r1.gather.scores, r4.gather.scores)
+    for a, b in zip(r1.gather.data, r4.gather.data):
+        np.testing.assert_array_equal(a, b)
+    if k == 0:
+        assert r1.gather.keys == [] and len(r1.gather.scores) == len(keys)
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_gather_tie_break_by_candidate_position(shards):
+    """Duplicate-content candidates score equal; winners must come back
+    in candidate-list order regardless of shard placement."""
+    dev = make_device("trace", shards=shards, sanitize=True)
+    kv = synth.kv_cache(ROWS, CH, seed=7)
+    keys = [f"d{i}" for i in range(5)]
+    dev.submit([WriteReq(k, kv, kind=KV) for k in keys])
+
+    rec, = dev.submit([_gather(keys, np.ones(CH, np.float32), k=2)])
+    assert rec.gather.keys == keys[:2]
+    assert rec.gather.indices == [0, 1]
+
+
+def test_gather_receipt_conservation_includes_compute():
+    """device_compute_s is a first-class accounted resource: the receipt
+    sum reproduces the aggregate (sanitizer cross-checks every submit)."""
+    dev = make_device("trace", sanitize=True)
+    keys = _write_pages(dev)
+    digest = np.ones(CH, np.float32)
+    recs = dev.submit([_gather(keys, digest, k=2),
+                       _gather(keys, digest, k=0)])
+    assert all(r.device_compute_s > 0 for r in recs)
+    base = dev.stats.device_compute_s
+    assert base == pytest.approx(sum(r.device_compute_s for r in recs))
+    # score-only pass reads fewer DRAM bytes than the winner pass
+    assert recs[1].dram_bytes_read < recs[0].dram_bytes_read
+
+
+def test_gather_score_view_cheaper_than_full_read():
+    """The SCORE view (sign + exponent planes only) must make the k=0
+    scoring pass touch well under half the DRAM bytes of a full read —
+    the whole point of scoring near memory."""
+    assert SCORE.r_m == 0 and SCORE.d_m == 0 and SCORE.r_e == 8
+    dev = make_device("trace", sanitize=True)
+    keys = _write_pages(dev)
+    digest = np.ones(CH, np.float32)
+    score_rec, = dev.submit([_gather(keys, digest, k=0)])
+    read_recs = dev.submit([ReadReq(k, kind=KV, view=FULL) for k in keys])
+    assert score_rec.dram_bytes_read < 0.5 * sum(
+        r.dram_bytes_read for r in read_recs)
+    # the score pass ships 4 B/candidate, never page payloads
+    assert score_rec.link_bytes_out == 4 * len(keys)
+
+
+# ---------------------------------------------------------------------------
+# KVPagePool
+# ---------------------------------------------------------------------------
+
+def _pool(device="trace", n_pages=6, policy=None, **kw):
+    from repro.runtime.paging import KVPagePool, LOSSLESS_POLICY
+
+    pool = KVPagePool(
+        device, page_tokens=8,
+        hbm_budget_bytes=2 * 8 * CH * 2,         # keep 2 pages resident
+        policy=policy or LOSSLESS_POLICY, sanitize=True, **kw,
+    )
+    kv = synth.kv_cache(8 * n_pages, CH, seed=5)
+    for i in range(n_pages):
+        pool.append_page(0, "k", i * 8, kv[i * 8:(i + 1) * 8],
+                         importance=float(i))
+    return pool
+
+
+def test_pool_gather_covering_k_matches_readback():
+    digest = np.ones(CH, np.float32)
+    pool_a, pool_b = _pool(), _pool()
+    spilled = [p for p in pool_a._pages if p.resident is None]
+    base = {p.key: d for p, d in zip(spilled, pool_a.read_pages(spilled))}
+    winners, data = pool_b.gather_topk(digest, len(base) + 1)
+    assert {p.key for p in winners} == set(base)
+    for p, d in zip(winners, data):
+        np.testing.assert_array_equal(d, base[p.key])
+
+
+def test_pool_gather_freezes_winner_views():
+    """First gather pins each candidate's winner view at its CURRENT
+    policy rank; later rank churn must not change fetch precision (that
+    is what keeps sync/async/shard runs bit-identical)."""
+    from repro.runtime import PAPER_POLICY
+
+    pool = _pool(policy=PAPER_POLICY)
+    digest = np.ones(CH, np.float32)
+    pool.gather_topk(digest, 1)
+    frozen = {p.key: p.gather_view for p in pool._pages
+              if p.resident is None}
+    assert all(v is not None for v in frozen.values())
+    # churn the ranking, gather again: views must not move
+    pool.update_importance({k: 100.0 for k in list(frozen)[:2]})
+    pool.gather_topk(digest, 1)
+    for p in pool._pages:
+        if p.key in frozen:
+            assert p.gather_view is frozen[p.key]
+
+
+def test_pool_gather_async_matches_sync():
+    digest = np.linspace(0, 1, CH).astype(np.float32)
+    pool_s, pool_a = _pool(), _pool()
+    w_s, d_s = pool_s.gather_topk(digest, 2)
+    cands, ticket = pool_a.gather_topk_async(digest, 2)
+    w_a, d_a = pool_a.drain_gather(cands, ticket)
+    assert [p.key for p in w_s] == [p.key for p in w_a]
+    for a, b in zip(d_s, d_a):
+        np.testing.assert_array_equal(a, b)
+    # traffic attribution stays conservative on both paths
+    for pool in (pool_s, pool_a):
+        assert sum(t.device_compute_s
+                   for t in pool.page_traffic.values()) > 0
+
+
+def test_pool_gather_no_spilled_candidates():
+    from repro.runtime.paging import KVPagePool, LOSSLESS_POLICY
+
+    pool = KVPagePool("trace", page_tokens=8, hbm_budget_bytes=1 << 20,
+                      policy=LOSSLESS_POLICY, sanitize=True)
+    kv = synth.kv_cache(8, CH, seed=6)
+    pool.append_page(0, "k", 0, kv)              # stays resident
+    winners, data = pool.gather_topk(np.ones(CH, np.float32), 4)
+    assert winners == [] and data == []
+    cands, ticket = pool.gather_topk_async(np.ones(CH, np.float32), 4)
+    assert cands == [] and ticket is None
+    assert pool.drain_gather(cands, ticket) == ([], [])
+
+
+def test_update_importance_unknown_keys_counted_and_strict():
+    pool = _pool()
+    known = pool._pages[0].key
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        pool.update_importance({known: 1.0, "ghost": 2.0})
+        pool.update_importance({"phantom": 3.0})
+    assert pool.unknown_importance_keys == 2
+    assert len(w) == 1                            # warn once, then count
+    with pytest.raises(KeyError):
+        pool.update_importance({"ghost": 1.0}, strict=True)
+
+    strict_pool = _pool(strict_importance=True)
+    with pytest.raises(KeyError):
+        strict_pool.update_importance({"ghost": 1.0})
+    strict_pool.update_importance({"ghost": 0.0}, strict=False)
+    assert strict_pool.unknown_importance_keys == 2  # raise still counts
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine end-to-end (model forward: slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_pair(smoke_model):
+    return smoke_model("qwen2-0.5b")
+
+
+def _gen(cfg, params, n=10, **kw):
+    from repro.runtime import ServeEngine
+    from repro.runtime.paging import LOSSLESS_POLICY
+
+    eng = ServeEngine(
+        cfg, params, max_seq=96, batch=1, page_tokens=16,
+        hbm_kv_budget=1 << 12, policy=LOSSLESS_POLICY, sanitize=True, **kw,
+    )
+    prompt = np.arange(48, dtype=np.int32).reshape(1, 48) % cfg.vocab
+    toks = eng.generate(prompt, n)
+    return eng, toks
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("async_io", [False, True])
+@pytest.mark.parametrize("shards", [1, 4])
+def test_pnm_covering_k_decodes_bit_identical(engine_pair, async_io, shards):
+    """pnm_topk >= spilled pages ⇒ the PNM engine fetches exactly what
+    the classic readback engine fetches ⇒ identical greedy tokens."""
+    cfg, params = engine_pair
+    dev_base = make_device("trace", shards=shards, sanitize=True)
+    dev_pnm = make_device("trace", shards=shards, sanitize=True)
+    _, t_base = _gen(cfg, params, device_kind=dev_base, async_io=async_io)
+    eng, t_pnm = _gen(cfg, params, device_kind=dev_pnm, async_io=async_io,
+                      pnm_topk=1_000)
+    np.testing.assert_array_equal(t_base, t_pnm)
+    assert eng.stats().tier_device_compute_s > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("async_io", [False, True])
+def test_pnm_bounded_k_cuts_link_bytes(engine_pair, async_io):
+    cfg, params = engine_pair
+    e_base, _ = _gen(cfg, params, device_kind="trace", async_io=async_io)
+    e_pnm, toks = _gen(cfg, params, device_kind="trace", async_io=async_io,
+                       pnm_topk=2)
+    assert e_base.stats().spilled_pages > 2      # the sweep regime exists
+    assert e_pnm.stats().tier_link_out < e_base.stats().tier_link_out
+    assert toks.min() >= 0 and toks.max() < cfg.vocab
+
+
+@pytest.mark.slow
+def test_attention_importance_wires_end_to_end(engine_pair):
+    """importance='attention' folds digest-proxy attention mass into the
+    pool ledger with zero unknown-key drops."""
+    cfg, params = engine_pair
+    eng, toks = _gen(cfg, params, device_kind="trace",
+                     importance="attention", pnm_topk=2)
+    assert toks.min() >= 0 and toks.max() < cfg.vocab
+    assert eng._imp_acc                          # masses accumulated
+    assert eng.pool.unknown_importance_keys == 0  # S1/S2: no silent drops
+
+
+@pytest.mark.slow
+def test_engine_rejects_bad_pnm_args(engine_pair):
+    cfg, params = engine_pair
+    with pytest.raises(ValueError):
+        _gen(cfg, params, n=0, importance="nonsense")
+    with pytest.raises(ValueError):
+        _gen(cfg, params, n=0, pnm_topk=-1)

@@ -63,6 +63,13 @@ FLOORS: Dict[str, float] = {
     # fleet scaling gate: 4 sharded devices must deliver >= 1.5x the
     # aggregate tok/s of one (modeled, deterministic — not host noise)
     "shard4_tok_s_gain": 1.5,
+    # PNM read mode: at 512k context the device-side top-k gather must
+    # hold >= 3x the link-bound full-readback throughput (modeled from
+    # measured per-page tier costs — deterministic)
+    "pnm_tok_s_gain_512k": 3.0,
+    # a gather whose k covers every candidate must ship exactly the
+    # classic readback bytes — an invariant, not a perf number
+    "pnm_topk_byte_identical": 1.0,
 }
 
 # Rows that exist to be tracked, never gated (their value is the

@@ -139,6 +139,11 @@ def build_symbol_tables():
     strings.update(("R1", "R2", "R3", "R4", "R5", "R6", "R1-R6",
                     "tracecheck", "tools.tracecheck", "tools/tracecheck",
                     "TRACE_SANITIZE"))
+    strings.update(("recency", "attention"))  # ServeEngine importance modes
+    # bench rows gated by absolute floors (tools/bench_diff.py FLOORS)
+    strings.update(("lz4_kernel_speedup", "lz4_kernel_byte_identical",
+                    "encode_batched_speedup", "shard4_tok_s_gain",
+                    "pnm_tok_s_gain_512k", "pnm_topk_byte_identical"))
     strings.update(("ledger-stored-equality", "receipt-conservation",
                     "busy-clock-monotonic", "inflight-window-bound",
                     "retire-cleanup", "refcount-conservation"))
